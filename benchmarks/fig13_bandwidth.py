@@ -1,0 +1,44 @@
+"""Figure 13: (a) clusters vs required bandwidth; (b) round-robin depth vs
+throughput/bandwidth-deficit/buffer size."""
+from __future__ import annotations
+
+import dataclasses
+
+
+def run() -> list:
+    from repro.core.params import PAPER_PARAMS
+    from repro.compiler.cost import TaurusModel, HBM_BW, ACC_BUF_BYTES
+
+    out = []
+    p = PAPER_PARAMS["gpt2"]
+
+    print("\n== Fig. 13a: clusters vs required bandwidth (GPT-2 params) ==")
+    print(f"{'clusters':>8s} {'bsk_GB/s':>9s} {'lwe_GB/s':>9s} {'total_GB/s':>10s} {'fits_2xHBM2E':>13s}")
+    for n_cl in (2, 4, 6, 8):
+        m = TaurusModel(p, clusters=n_cl)
+        bw = m.batch_bandwidth()
+        # keys are shared (constant); LWE/GLWE traffic scales with clusters
+        lwe = bw["lwe"] * n_cl / 4
+        total = bw["bsk"] + bw["ksk"] + lwe
+        print(f"{n_cl:8d} {bw['bsk'] / 1e9:9.1f} {lwe / 1e9:9.1f} "
+              f"{total / 1e9:10.1f} {'yes' if total < HBM_BW else 'NO':>13s}")
+        out.append({"bench": "fig13a", "clusters": n_cl,
+                    "total_gbs": total / 1e9, "fits": total < HBM_BW})
+
+    print("\n== Fig. 13b: round-robin ciphertexts vs throughput/buffer ==")
+    print(f"{'rr':>3s} {'throughput':>11s} {'bw_deficit':>11s} {'buf_KB':>8s} "
+          f"{'paper_buf@12':>12s}")
+    for rr in (2, 4, 8, 12, 16, 24):
+        m = TaurusModel(p)
+        t_batch = rr * m.t_ct_br
+        bsk_bw = m.bsk_bytes / t_batch
+        deficit = max(0.0, bsk_bw + m.ksk_bytes / t_batch - HBM_BW)
+        buf = rr * m.acc_bytes_per_ct / 1024
+        # throughput saturates once bandwidth is satisfied (paper: 12)
+        thr = min(1.0, HBM_BW / (bsk_bw + m.ksk_bytes / t_batch))
+        note = "9216" if rr == 12 else ""
+        print(f"{rr:3d} {thr:11.2f} {deficit / 1e9:11.1f} {buf:8.0f} "
+              f"{note:>12s}")
+        out.append({"bench": "fig13b", "rr": rr, "throughput": thr,
+                    "deficit_gbs": deficit / 1e9, "buf_kb": buf})
+    return out

@@ -1,0 +1,32 @@
+"""Figure 15: cluster utilization vs input batch size (Observation 7).
+
+Serial workloads (KNN, Decision Tree) gain the most from batching:
+independent queries fill the idle clusters of dependent levels."""
+from __future__ import annotations
+
+
+def run() -> list:
+    from repro.compiler import workloads, passes, build_schedule, TaurusModel
+    from repro.compiler.passes import PhysOp
+
+    out = []
+    print("\n== Fig. 15: utilization vs input batch size ==")
+    names = ["knn", "decision_tree", "xgboost", "gpt2"]
+    print(f"{'workload':16s}" + "".join(f"  b={b:>2d}" for b in (1, 2, 4, 8)))
+    W = workloads.build_all()
+    for name in names:
+        w = W[name]
+        ops, _ = passes.lower_to_physical(w.graph)
+        row = []
+        for bsz in (1, 2, 4, 8):
+            # batch-of-queries: replicate the op stream per query; same
+            # levels, b x the ciphertexts per level
+            b_ops = [PhysOp(o.kind, o.node, o.count * bsz, o.level, o.macs * bsz,
+                            o.table_id) for o in ops]
+            sched = build_schedule(b_ops)
+            _, util = TaurusModel(w.params).runtime(sched)
+            row.append(util)
+        print(f"{w.name:16s}" + "".join(f" {u:5.2f}" for u in row))
+        out.append({"bench": "fig15", "workload": name,
+                    "util_by_batch": row})
+    return out

@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,table2,...]
+
+Writes benchmarks/results.json and prints each table with paper
+comparisons inline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import traceback
+
+ALL = ["fig5", "table2", "table4", "fig13", "fig15", "dedup", "engine"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    which = args.only.split(",") if args.only else ALL
+
+    from benchmarks import (fig5_addition, table2_workloads, table4_xpu,
+                            fig13_bandwidth, fig15_utilization, dedup_stats,
+                            engine_wallclock)
+    mods = {"fig5": fig5_addition, "table2": table2_workloads,
+            "table4": table4_xpu, "fig13": fig13_bandwidth,
+            "fig15": fig15_utilization, "dedup": dedup_stats,
+            "engine": engine_wallclock}
+
+    results, failed = [], []
+    for name in which:
+        try:
+            results.extend(mods[name].run())
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    path = os.path.join(os.path.dirname(__file__), "results.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    print(f"\n[benchmarks] {len(results)} rows -> {path}; "
+          f"{len(failed)} failed {failed}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,32 @@
+"""Table II: end-to-end workload runtimes — Taurus cost model vs the
+paper's reported Taurus/CPU/GPU numbers."""
+from __future__ import annotations
+
+
+def run() -> list:
+    from repro.compiler import (workloads, passes, build_schedule,
+                                TaurusModel, CpuModel)
+
+    out = []
+    print("\n== Table II: workload runtimes (model vs paper) ==")
+    print(f"{'workload':16s} {'PBS':>7s} {'model_ms':>9s} {'paper_ms':>9s} "
+          f"{'ratio':>6s} | {'spd_cpu':>8s} {'paper':>6s} | {'cpu_model_s':>11s} {'paper_s':>8s}")
+    for name, w in workloads.build_all().items():
+        ops, stats = passes.lower_to_physical(w.graph)
+        sched = build_schedule(ops)
+        t, util = TaurusModel(w.params).bandwidth_bound_runtime(sched)
+        cpu_model = CpuModel(w.params).runtime(sched)
+        # faithful comparison: paper-measured CPU seconds / our Taurus model
+        spd = w.paper_cpu_s / t
+        paper_spd = w.paper_cpu_s * 1e3 / w.paper_taurus_ms
+        print(f"{w.name:16s} {sched.total_pbs:7d} {t * 1e3:9.1f} "
+              f"{w.paper_taurus_ms:9.1f} {t * 1e3 / w.paper_taurus_ms:6.2f} | "
+              f"{spd:8.0f} {paper_spd:6.0f} | {cpu_model:11.1f} "
+              f"{w.paper_cpu_s:8.1f}")
+        out.append({"bench": "table2", "workload": name,
+                    "n_pbs": sched.total_pbs, "model_ms": t * 1e3,
+                    "paper_ms": w.paper_taurus_ms,
+                    "speedup_vs_paper_cpu": spd, "paper_speedup": paper_spd,
+                    "cpu_model_s": cpu_model, "paper_cpu_s": w.paper_cpu_s,
+                    "util": util})
+    return out

@@ -1,0 +1,24 @@
+"""Table IV: Taurus vs the Morphling-style XPU variant (same compiler)."""
+from __future__ import annotations
+
+
+def run() -> list:
+    from repro.compiler import workloads, passes, build_schedule, TaurusModel
+    from repro.compiler.cost import xpu_model
+
+    out = []
+    print("\n== Table IV: Taurus vs Taurus_XPU (systolic-array baseline) ==")
+    print(f"{'workload':16s} {'taurus_ms':>10s} {'xpu_ms':>10s} "
+          f"{'speedup':>8s} {'paper':>6s}")
+    for name, w in workloads.build_all().items():
+        ops, _ = passes.lower_to_physical(w.graph)
+        sched = build_schedule(ops)
+        t, _ = TaurusModel(w.params).bandwidth_bound_runtime(sched)
+        tx, _ = xpu_model(w.params).bandwidth_bound_runtime(sched)
+        paper = w.paper_xpu_ms / w.paper_taurus_ms
+        print(f"{w.name:16s} {t * 1e3:10.1f} {tx * 1e3:10.1f} "
+              f"{tx / t:8.2f} {paper:6.2f}")
+        out.append({"bench": "table4", "workload": name,
+                    "taurus_ms": t * 1e3, "xpu_ms": tx * 1e3,
+                    "speedup": tx / t, "paper_speedup": paper})
+    return out

@@ -1,0 +1,92 @@
+"""Atomic, versioned checkpointing for arbitrary pytrees (no orbax).
+
+Layout:  <dir>/step_<N>/   arrays.npz  tree.json   (+ .done marker)
+Writes go to a tmp dir first and are renamed into place — a crash mid-save
+never corrupts the latest checkpoint (fault-tolerance requirement).
+Restore re-shards onto the CURRENT mesh (elastic restart: the device set
+may have changed between save and load).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree) -> str:
+        leaves, treedef = _flatten(tree)
+        arrays = {f"a{i}": np.asarray(jax.device_get(x)) for i, x in enumerate(leaves)}
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
+        try:
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            with open(os.path.join(tmp, "tree.json"), "w") as f:
+                json.dump({"treedef": str(treedef), "n": len(leaves),
+                           "step": step}, f)
+            with open(os.path.join(tmp, ".done"), "w") as f:
+                f.write("ok")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc()
+        return final
+
+    # -- restore ------------------------------------------------------------
+    def latest_step(self):
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and \
+                    os.path.exists(os.path.join(self.dir, name, ".done")):
+                steps.append(int(name.split("_")[1]))
+        return max(steps) if steps else None
+
+    def restore(self, like, step: int | None = None, shardings=None):
+        """`like` provides the pytree structure; values are replaced from
+        disk and device_put with `shardings` (or like's shardings)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        leaves, treedef = _flatten(like)
+        assert len(leaves) == len(data.files), "checkpoint/model mismatch"
+        restored = []
+        for i, ref in enumerate(leaves):
+            arr = data[f"a{i}"]
+            if shardings is not None:
+                sh = jax.tree.leaves(shardings)[i]
+                restored.append(jax.device_put(arr, sh))
+            elif hasattr(ref, "sharding"):
+                restored.append(jax.device_put(arr, ref.sharding))
+            else:
+                restored.append(jax.numpy.asarray(arr))
+        return jax.tree.unflatten(treedef, restored), step
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.dir)
+            if n.startswith("step_"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,11 @@
+"""Taurus companion compiler (paper §V).
+
+FHELinAlg-style tensor IR + tracing, the two deduplication passes
+(KS-dedup, ACC-dedup), the batch scheduler with BRU/LPU overlap, and the
+calibrated Taurus cycle/bandwidth cost model that reproduces Tables II/IV
+and Figures 13/15.
+"""
+from repro.compiler.ir import Graph, FheTensor, trace  # noqa: F401
+from repro.compiler.passes import lower_to_physical, DedupStats  # noqa: F401
+from repro.compiler.schedule import Schedule, build_schedule  # noqa: F401
+from repro.compiler.cost import TaurusModel, CpuModel, GpuModel  # noqa: F401

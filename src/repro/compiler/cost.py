@@ -1,0 +1,216 @@
+"""Calibrated Taurus / CPU / GPU cost models (paper §VI).
+
+Taurus microarchitecture constants (paper §IV):
+  * BRU: 512 BSK multiplications/cycle @ 1 GHz.  One blind-rotation
+    iteration of one ciphertext costs (k+1)^2*level*N/256 cycles (the
+    2x folds the 4-real-mult complex MAC into the 512/cycle figure).
+  * 12 round-robin ciphertexts per BRU keep the pipeline full; the
+    single-ciphertext LATENCY is therefore 12x the per-ct compute time.
+    Validation: GPT-2 params (n=1003, k=1, l=1, N=32768) give
+    12 * 1003*4*32768/256 cycles = 6.16 ms — exactly the paper's
+    reported minimum high-width bootstrap latency; CNN-20 params give
+    0.28 ms, matching §VI-C.
+  * LPU: 4 lanes x 64 elements @ 1 GHz = 256 MAC/cycle/cluster.
+  * 4 compute clusters; batch = 48 ciphertexts; full synchronization.
+  * Two HBM2E stacks: 819 GB/s.
+
+Memory model (Fig. 13): BSK/KSK stream ONCE per batch (global buffers +
+NoC broadcast, key reuse across the whole batch); GLWE accumulators live
+in the 9216 KB per-cluster buffer and spill to DRAM when
+12 * 2 * (k+1) * N * 12 B exceeds it (Fig. 14).
+
+The XPU variant (Table IV) replaces the BRU with a Morphling-style
+systolic array: 4 rows x 8 coeff/cycle FFT units and NO cross-ciphertext
+BSK reuse; with k=1 only (k+1)=2 of 4 PE columns are used (Obs. 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.params import TFHEParams
+from repro.compiler.schedule import Schedule, Batch
+
+GHZ = 1e9
+HBM_BW = 819e9
+ACC_BUF_BYTES = 9216 * 1024
+CLUSTERS = 4
+BATCH = 48
+ROUND_ROBIN = 12
+
+
+@dataclasses.dataclass
+class TaurusModel:
+    params: TFHEParams
+    mac_per_cycle: int = 512          # BRU BSK mults/cycle
+    lpu_mac_per_cycle: int = 256      # per cluster
+    clusters: int = CLUSTERS
+    bsk_reuse: bool = True            # round-robin key reuse (paper)
+    sync_groups: int = 1              # Obs. 5: grouped synchronization
+
+    # -- per-ciphertext compute -------------------------------------------
+    @property
+    def t_ct_br(self) -> float:
+        p = self.params
+        cycles = p.n * (p.k + 1) ** 2 * p.pbs_level * p.N / (self.mac_per_cycle / 2)
+        return cycles / GHZ
+
+    @property
+    def t_ct_ks(self) -> float:
+        p = self.params
+        cycles = p.big_n * p.ks_level * (p.n + 1) / self.lpu_mac_per_cycle
+        return cycles / GHZ
+
+    @property
+    def t_ct_se(self) -> float:
+        return self.params.big_n / self.lpu_mac_per_cycle / GHZ
+
+    @property
+    def pbs_latency(self) -> float:
+        """Single-ciphertext bootstrap latency (12 in flight)."""
+        return ROUND_ROBIN * self.t_ct_br
+
+    # -- per-batch ----------------------------------------------------------
+    def t_br_batch(self, b: Batch) -> float:
+        per_cluster = -(-max(b.n_br, 0) // self.clusters)
+        return per_cluster * self.t_ct_br
+
+    def t_lpu_batch(self, b: Batch) -> float:
+        ks = -(-b.n_ks // self.clusters) * self.t_ct_ks
+        se = -(-b.n_se // self.clusters) * self.t_ct_se
+        lin = b.lin_macs / (self.clusters * self.lpu_mac_per_cycle * GHZ)
+        return ks + se + lin
+
+    def runtime(self, sched: Schedule) -> tuple:
+        return sched.runtime(self.t_br_batch, self.t_lpu_batch)
+
+    # -- memory bandwidth (Fig. 13 / Obs. 5) ---------------------------------
+    @property
+    def bsk_bytes(self) -> float:
+        p = self.params
+        return p.n * (p.k + 1) ** 2 * p.pbs_level * (p.N // 2) * 12.0  # 48-bit cplx
+
+    @property
+    def ksk_bytes(self) -> float:
+        p = self.params
+        return p.big_n * p.ks_level * (p.n + 1) * 8.0
+
+    @property
+    def acc_bytes_per_ct(self) -> float:
+        """Two GLWE accumulators per in-flight ciphertext, stored in the
+        transform domain: (k+1) polys x N/2 complex coeffs x 12 B
+        (48-bit re+im).  At the paper's GPT-2 params (N=32768, k=1) this
+        gives exactly the 9216 KB default for 12 round-robin cts (Fig. 14).
+        """
+        p = self.params
+        return 2 * (p.k + 1) * (p.N // 2) * 12.0
+
+    @property
+    def round_robin_eff(self) -> int:
+        """In-flight ciphertexts per BRU, limited by the 9216 KB
+        accumulator buffer at large N (the paper's Fig. 13b/14 trade)."""
+        fit = int(ACC_BUF_BYTES // self.acc_bytes_per_ct)
+        return max(1, min(ROUND_ROBIN, fit))
+
+    @property
+    def pbs_latency(self) -> float:  # override: depth-aware
+        return self.round_robin_eff * self.t_ct_br
+
+    def batch_bandwidth(self) -> dict:
+        """Required DRAM bandwidth during one full BR batch.
+
+        BSK chunks are shared across clusters (global buffer + NoC) and
+        across the in-flight round-robin set; when fewer ciphertexts fit
+        in the accumulator buffer (large N), the 12 per-core assignments
+        run in ceil(12/rr_eff) waves and the BSK streams once per wave.
+        """
+        t = ROUND_ROBIN * self.t_ct_br        # full-batch BR time
+        waves = -(-ROUND_ROBIN // self.round_robin_eff)
+        streams = (waves * self.sync_groups) if self.bsk_reuse else BATCH
+        bsk_bw = self.bsk_bytes * streams / t
+        p = self.params
+        lwe_bw = BATCH * (p.big_n + 1) * 8.0 / t
+        return {"bsk": bsk_bw, "ksk": self.ksk_bytes / t,
+                "lwe": lwe_bw, "waves": waves,
+                "total": bsk_bw + self.ksk_bytes / t + lwe_bw}
+
+    def bandwidth_bound_runtime(self, sched: Schedule) -> tuple:
+        """Runtime including the DRAM-bandwidth ceiling (Fig. 14)."""
+        t_comp, util = self.runtime(sched)
+        bw = self.batch_bandwidth()["total"]
+        scale = max(1.0, bw / HBM_BW)
+        return t_comp * scale, util / scale
+
+
+def xpu_model(params: TFHEParams) -> TaurusModel:
+    """Morphling-style systolic-array variant (Table IV baseline).
+
+    4 FFT rows x 8 coeffs/cycle; with k=1 only 2 of 4 PE columns are
+    usable (Obs. 3), and there is no cross-ciphertext BSK reuse, so the
+    effective MAC throughput is 8 coeffs * 2 rows * 4 SAs ~ 75/cycle
+    after the bandwidth penalty of streaming BSK per ciphertext.
+    """
+    return TaurusModel(params, mac_per_cycle=75, bsk_reuse=False)
+
+
+@dataclasses.dataclass
+class CpuModel:
+    """Concrete on a 48-core EPYC 7R13 (paper's baseline platform).
+
+    Per-core PBS time = c1 * n*(k+1)^2*l*N*log2(N) * cache_penalty, where
+    cache_penalty models the paper's §I observation that the scaled
+    evaluation keys overflow L3 and stall on DRAM bandwidth:
+    (bsk_bytes / L3)^0.5 once the BSK exceeds the 32 MB slice.
+
+    Calibrated against Table II: CNN-20 gives ~92 ms/PBS/core at N=2048
+    and GPT-2 ~6 s/PBS/core at N=32768; c1 = 8.5e-10 with the cache
+    penalty reproduces both within ~1.5x.  NOTE: benchmarks compare
+    Taurus primarily against the paper's MEASURED CPU/GPU seconds; this
+    model is the analytic cross-check.
+    """
+    params: TFHEParams
+    cores: int = 48
+    c1: float = 8.5e-10
+    l3_bytes: float = 32e6
+
+    @property
+    def t_ct_pbs(self) -> float:
+        import math
+        p = self.params
+        units = p.n * (p.k + 1) ** 2 * p.pbs_level * p.N * math.log2(p.N)
+        bsk = p.n * (p.k + 1) ** 2 * p.pbs_level * (p.N // 2) * 16.0  # f64 cplx
+        penalty = max(1.0, (bsk / self.l3_bytes) ** 0.5)
+        return self.c1 * units * penalty
+
+    def runtime(self, sched: Schedule) -> float:
+        t = 0.0
+        for b in sched.batches:
+            t += -(-b.n_br // self.cores) * self.t_ct_pbs
+            t += b.lin_macs * self.params.big_n * 2e-12 / self.cores
+        return t
+
+
+@dataclasses.dataclass
+class GpuModel:
+    """Concrete-cuda on 2x RTX A5000 (paper's GPU baseline).
+
+    GPUs batch PBS well but pay kernel-launch/transfer overheads on the
+    serial chains; calibrated to the paper's observed 0.6-3x over CPU.
+    """
+    params: TFHEParams
+    batch_throughput: int = 512       # ciphertexts bootstrapped per wave
+    c_unit: float = 2.2e-11           # per n*(k+1)^2*l*N unit per wave
+    overhead: float = 150e-6          # per dependent level
+
+    @property
+    def t_wave(self) -> float:
+        p = self.params
+        return p.n * (p.k + 1) ** 2 * p.pbs_level * p.N * self.c_unit
+
+    def runtime(self, sched: Schedule) -> float:
+        t = 0.0
+        for b in sched.batches:
+            t += -(-b.n_br // self.batch_throughput) * self.t_wave
+            if b.dependent:
+                t += self.overhead
+            t += b.lin_macs * 5e-12
+        return t

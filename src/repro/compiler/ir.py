@@ -1,0 +1,140 @@
+"""FHELinAlg-style tensor IR (paper Fig. 12: MLIR FHELinAlg dialect).
+
+Values are ciphertext TENSORS (every element an LWE ciphertext); plaintext
+constants ride along as numpy arrays.  Ops:
+
+    input   (shape)
+    add     (a, b)                    elementwise ct + ct     — no PBS
+    sub     (a, b)                                            — no PBS
+    addc    (a, const)                ct + plaintext          — no PBS
+    mulc    (a, const)                ct * plaintext integer  — no PBS
+    linear  (a, W[, b])               const-matrix matmul     — no PBS
+    lut     (a, table)                elementwise PBS (the only op that
+                                      bootstraps; bivariate LUTs are
+                                      pre-combined linearly, footnote 4)
+    concat/reshape                    layout only
+
+The tracer below builds graphs from numpy-like code; `repro.fhe_ml`
+lowers quantized transformer blocks into it, and `repro.compiler.passes`
+lowers graphs to physical Taurus ops with both dedup passes applied.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+LINEAR_OPS = ("add", "sub", "addc", "mulc", "linear", "concat", "reshape")
+
+
+@dataclasses.dataclass
+class Node:
+    id: int
+    op: str
+    inputs: tuple            # node ids
+    shape: tuple
+    attrs: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_elements(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+@dataclasses.dataclass
+class Graph:
+    nodes: list = dataclasses.field(default_factory=list)
+    outputs: list = dataclasses.field(default_factory=list)
+
+    def add(self, op: str, inputs: tuple, shape: tuple, **attrs) -> Node:
+        node = Node(len(self.nodes), op, inputs, tuple(shape), attrs)
+        self.nodes.append(node)
+        return node
+
+    def users(self) -> dict:
+        out: dict = {n.id: [] for n in self.nodes}
+        for n in self.nodes:
+            for i in n.inputs:
+                out[i].append(n.id)
+        return out
+
+    # -- statistics ---------------------------------------------------------
+    def count(self, op: str) -> int:
+        return sum(1 for n in self.nodes if n.op == op)
+
+    def lut_applications(self) -> int:
+        """Total element-level PBS operations (before any dedup)."""
+        return sum(n.n_elements for n in self.nodes if n.op == "lut")
+
+
+class FheTensor:
+    """Tracing handle: numpy-like ops recorded into a Graph."""
+
+    def __init__(self, graph: Graph, node: Node):
+        self.graph = graph
+        self.node = node
+
+    @property
+    def shape(self):
+        return self.node.shape
+
+    def _bin(self, other: "FheTensor", op: str) -> "FheTensor":
+        assert self.shape == other.shape, (self.shape, other.shape)
+        n = self.graph.add(op, (self.node.id, other.node.id), self.shape)
+        return FheTensor(self.graph, n)
+
+    def __add__(self, other):
+        if isinstance(other, FheTensor):
+            return self._bin(other, "add")
+        n = self.graph.add("addc", (self.node.id,), self.shape,
+                           const=np.asarray(other))
+        return FheTensor(self.graph, n)
+
+    def __sub__(self, other):
+        if isinstance(other, FheTensor):
+            return self._bin(other, "sub")
+        return self + (-np.asarray(other))
+
+    def __mul__(self, const):
+        assert not isinstance(const, FheTensor), \
+            "ct*ct needs a bivariate LUT — use lut2()"
+        n = self.graph.add("mulc", (self.node.id,), self.shape,
+                           const=np.asarray(const))
+        return FheTensor(self.graph, n)
+
+    def linear(self, W: np.ndarray, bias: Optional[np.ndarray] = None):
+        """x @ W (+ bias): W integer plaintext (in_dim, out_dim)."""
+        assert self.shape[-1] == W.shape[0]
+        shape = self.shape[:-1] + (W.shape[1],)
+        n = self.graph.add("linear", (self.node.id,), shape, W=W, bias=bias)
+        return FheTensor(self.graph, n)
+
+    def lut(self, table: np.ndarray, name: str = ""):
+        """Elementwise programmable bootstrap with `table`."""
+        n = self.graph.add("lut", (self.node.id,), self.shape,
+                           table=np.asarray(table), name=name)
+        return FheTensor(self.graph, n)
+
+    def lut2(self, other: "FheTensor", table: np.ndarray, radix: int,
+             name: str = ""):
+        """Bivariate LUT (paper footnote 4): combine linearly then one PBS.
+        encoded = a * radix + b; table indexed by the combined value."""
+        comb = (self * radix)._bin(other, "add")
+        return comb.lut(table, name=name)
+
+    def reshape(self, *shape):
+        n = self.graph.add("reshape", (self.node.id,), shape)
+        return FheTensor(self.graph, n)
+
+
+def trace(fn, *input_shapes):
+    """Run `fn(x1, x2, ...)` on tracing tensors; returns the Graph."""
+    g = Graph()
+    args = [FheTensor(g, g.add("input", (), s)) for s in input_shapes]
+    out = fn(*args)
+    outs = out if isinstance(out, (tuple, list)) else (out,)
+    g.outputs = [t.node.id for t in outs]
+    return g

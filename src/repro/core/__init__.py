@@ -1,0 +1,14 @@
+"""Core multi-bit TFHE scheme in JAX (the paper's subject).
+
+The torus modulus is q = 2^64, so every ciphertext tensor is uint64 and
+x64 must be enabled.  We enable it here, at ``repro.core`` import time —
+the LM-framework side (`repro.models`, `repro.launch`) never imports this
+package and is dtype-explicit, so enabling x64 is safe process-wide.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.params import TFHEParams, TEST_PARAMS, TEST_PARAMS_4BIT, PAPER_PARAMS  # noqa: E402,F401
+from repro.core import torus, fft, decompose, lwe, glwe, ggsw, pbs  # noqa: E402,F401
+from repro.core import noise, boolean  # noqa: E402,F401

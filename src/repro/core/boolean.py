@@ -1,0 +1,117 @@
+"""Boolean TFHE — the paper's comparison BASELINE (Fig. 2a / Fig. 5 top).
+
+Bits are encoded as ±1/8 on the torus; every gate is one linear
+combination followed by a sign-extracting programmable bootstrap (the
+"gate bootstrapping" that makes Boolean TFHE ~1000x slower per useful
+operation than multi-bit linear ops — Observation 1).
+
+Gates (lin -> sign PBS), with T = 2^64:
+    AND : a + b - 1/8        OR  : a + b + 1/8
+    NAND: 1/8 - a - b        XOR : 2a + 2b + 1/4
+    NOT : -a  (no bootstrap)
+Full adder: s = a^b^cin (2 XOR-PBS), cout = MAJ(a,b,cin) = sign(a+b+cin)
+(1 PBS) => 3 bootstraps per bit vs the paper's 5-gate count; both are
+reported by benchmarks/fig5_addition.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batch as batch_mod, glwe, lwe
+from repro.core.params import TFHEParams
+from repro.core.pbs import TFHEContext
+
+U64 = jnp.uint64
+EIGHTH = U64(1) << U64(61)       # 1/8 of the torus
+QUARTER = U64(1) << U64(62)
+
+
+def encode_bit(b) -> jax.Array:
+    """bit -> ±1/8 torus."""
+    b = jnp.asarray(b, U64)
+    return jnp.where(b > 0, EIGHTH, (-jnp.asarray(EIGHTH, jnp.int64)).astype(U64))
+
+
+@dataclasses.dataclass
+class BooleanContext:
+    """Gate-bootstrapping layer over a TFHEContext's key material."""
+    ctx: TFHEContext
+
+    @property
+    def params(self) -> TFHEParams:
+        return self.ctx.params
+
+    # -- client ----------------------------------------------------------
+    def encrypt(self, key: jax.Array, bits) -> jax.Array:
+        m = encode_bit(jnp.asarray(bits, U64))
+        return lwe.encrypt(key, self.ctx.big_sk, m, self.params.glwe_std)
+
+    def decrypt(self, ct: jax.Array) -> jax.Array:
+        ph = lwe.decrypt_phase(self.ctx.big_sk, ct)
+        return (ph < (U64(1) << U64(63))).astype(jnp.int32)  # sign(phase)>0
+
+    # -- the sign bootstrap ------------------------------------------------
+    def _sign_pbs(self, cts: jax.Array) -> jax.Array:
+        """(B, big_n+1) -> sign-refreshed ±1/8 ciphertexts (one PBS each)."""
+        p = self.params
+        small = batch_mod.keyswitch_batch(cts, self.ctx.ksk, p)
+        ms = lwe.mod_switch(small, p.log2_N + 1)
+        poly = jnp.full((p.N,), EIGHTH, U64)      # constant +1/8 test poly
+        luts = glwe.trivial(jnp.broadcast_to(poly, (cts.shape[0], p.N)), p.k)
+        acc = batch_mod.blind_rotate_batch(luts, ms, self.ctx.bsk_f, p)
+        return glwe.sample_extract(acc)
+
+    # -- gates (batched over leading axis) ----------------------------------
+    def _const(self, c: jax.Array, like: jax.Array) -> jax.Array:
+        z = jnp.zeros_like(like)
+        return z.at[..., -1].set(c)
+
+    def nand(self, a, b):
+        lin = self._const(EIGHTH, a) - a - b
+        return self._sign_pbs(lin)
+
+    def and_(self, a, b):
+        lin = a + b - self._const(EIGHTH, a)
+        return self._sign_pbs(lin)
+
+    def or_(self, a, b):
+        lin = a + b + self._const(EIGHTH, a)
+        return self._sign_pbs(lin)
+
+    def xor(self, a, b):
+        lin = (a + b) * U64(2) + self._const(QUARTER, a)
+        return self._sign_pbs(lin)
+
+    def maj(self, a, b, c):
+        """Majority(a, b, c) — the carry of a full adder in ONE PBS."""
+        return self._sign_pbs(a + b + c)
+
+    def not_(self, a):
+        return (-a.astype(jnp.int64)).astype(U64)
+
+    # -- ripple-carry adder (Fig. 5 top) -------------------------------------
+    def add_ripple(self, a_bits: jax.Array, b_bits: jax.Array):
+        """Add two little-endian encrypted bit vectors (n, big_n+1).
+
+        Returns (n+1, big_n+1) sum bits.  3 bootstraps per bit position
+        (2 XOR + 1 MAJ)."""
+        n = a_bits.shape[0]
+        carry = None
+        out = []
+        for i in range(n):
+            axb = self.xor(a_bits[i:i + 1], b_bits[i:i + 1])
+            if carry is None:
+                out.append(axb)
+                carry = self.and_(a_bits[i:i + 1], b_bits[i:i + 1])
+            else:
+                out.append(self.xor(axb, carry))
+                carry = self.maj(a_bits[i:i + 1], b_bits[i:i + 1], carry)
+        out.append(carry)
+        return jnp.concatenate(out, axis=0)
+
+    @property
+    def bootstraps_per_add_bit(self) -> int:
+        return 3

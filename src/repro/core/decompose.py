@@ -1,0 +1,52 @@
+"""Signed gadget decomposition (the paper's Decomposer Unit, §IV-E).
+
+Decomposes a torus element v (uint64) into `level` signed digits in
+[-B/2, B/2), B = 2^base_log, such that
+
+    v  ~=  sum_l  digit_l * g_l,      g_l = 2^(64 - (l+1)*base_log)
+
+with the closest-representative rounding the hardware's "initial scaling
+unit" performs.  Digit index l=0 is the MOST significant level.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+U64 = jnp.uint64
+I64 = jnp.int64
+
+
+def decompose(v: jax.Array, base_log: int, level: int) -> jax.Array:
+    """uint64 (...,) -> int64 (..., level) signed digits, MSB level first."""
+    assert v.dtype == U64
+    B = 1 << base_log
+    total = base_log * level
+    shift = 64 - total
+    # Round-to-nearest keep of the top `total` bits ("initial scaling unit").
+    if shift > 0:
+        u = (v + (U64(1) << U64(shift - 1))) >> U64(shift)
+    else:
+        u = v
+    # LSB-first signed digit extraction with carry ("digit extraction unit").
+    digits = []
+    carry = jnp.zeros_like(u, dtype=I64)
+    for _ in range(level):
+        raw = (u & U64(B - 1)).astype(I64) + carry
+        u = u >> U64(base_log)
+        hi = raw >= (B // 2)
+        digit = jnp.where(hi, raw - B, raw)
+        carry = hi.astype(I64)
+        digits.append(digit)
+    # final carry folds into bits beyond the kept window; dropped by design
+    digits.reverse()  # MSB level first
+    return jnp.stack(digits, axis=-1)
+
+
+def recompose(digits: jax.Array, base_log: int, level: int) -> jax.Array:
+    """Inverse of `decompose` up to the rounding error (for tests)."""
+    out = jnp.zeros(digits.shape[:-1], dtype=U64)
+    for l in range(level):
+        g = U64(1) << U64(64 - (l + 1) * base_log)
+        out = out + digits[..., l].astype(U64) * g
+    return out

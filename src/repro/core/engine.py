@@ -1,0 +1,101 @@
+"""TaurusEngine: the paper's 4-cluster accelerator as a mesh of devices.
+
+Mapping (paper -> here):
+  compute cluster            -> one mesh device on the `data` axis
+  12 round-robin cts/cluster -> `batch_per_device` (default 12)
+  48-ct scheduling batch     -> engine.batch_size = 12 * n_devices
+  global BSK/KSK buffer +NoC -> keys replicated across the mesh
+  full synchronization       -> one SPMD program per PBS batch (Obs. 5)
+
+The engine is the execution backend for `repro.compiler` schedules and
+the unit benchmarks in `benchmarks/`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import batch as batch_mod, glwe, lwe, torus
+from repro.core.params import TFHEParams
+
+U64 = jnp.uint64
+
+
+@dataclasses.dataclass
+class TaurusEngine:
+    params: TFHEParams
+    bsk_f: jax.Array
+    ksk: jax.Array
+    mesh: Optional[Mesh] = None
+    data_axis: str = "data"
+    batch_per_device: int = 12  # paper's round-robin depth (Fig. 13b)
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def n_clusters(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.data_axis]
+
+    @property
+    def batch_size(self) -> int:
+        return self.batch_per_device * self.n_clusters
+
+    # -- linear ops (LPU; no bootstrapping, Fig. 2b step 4) -----------------
+    def add(self, a, b):
+        return lwe.add(a, b)
+
+    def sub(self, a, b):
+        return lwe.sub(a, b)
+
+    def scalar_mul(self, a, c):
+        return lwe.scalar_mul(a, c)
+
+    def add_plain(self, a, msg):
+        return lwe.add_plain(a, torus.encode(jnp.asarray(msg, dtype=U64), self.params.delta))
+
+    def trivial(self, msg) -> jax.Array:
+        m = torus.encode(jnp.asarray(msg, dtype=U64), self.params.delta)
+        return lwe.trivial(m, self.params.big_n)
+
+    # -- PBS (BRU + LPU pipeline) -------------------------------------------
+    def lut_batch(self, cts: jax.Array, lut_polys: jax.Array) -> jax.Array:
+        """Apply per-ciphertext LUTs with noise refresh.
+
+        cts: (B, k*N+1); lut_polys: (B, N) torus polys
+        (`glwe.make_lut_poly` encodes integer tables).
+        Pads B up to a multiple of the cluster count.
+        """
+        B = cts.shape[0]
+        shards = self.n_clusters
+        pad = (-B) % shards
+        if pad:
+            cts = jnp.concatenate([cts, cts[:pad]], axis=0)
+            lut_polys = jnp.concatenate([lut_polys, lut_polys[:pad]], axis=0)
+        if self.mesh is None:
+            out = batch_mod.pbs_batch(cts, lut_polys, self.bsk_f, self.ksk, self.params)
+        else:
+            data_sh = NamedSharding(self.mesh, P(self.data_axis))
+            repl = NamedSharding(self.mesh, P())
+            fn = jax.jit(
+                batch_mod.pbs_batch,
+                static_argnames=("params",),
+                in_shardings=(data_sh, data_sh, repl, repl),
+                out_shardings=data_sh,
+            )
+            out = fn(cts, lut_polys, self.bsk_f, self.ksk, self.params)
+        return out[:B]
+
+    def lut_batch_xpu(self, cts: jax.Array, lut_polys: jax.Array) -> jax.Array:
+        """Morphling-XPU-style baseline: no cross-ciphertext BSK reuse."""
+        return batch_mod.pbs_unbatched_loop(
+            cts, lut_polys, self.bsk_f, self.ksk, self.params
+        )
+
+    @classmethod
+    def from_context(cls, ctx, mesh: Optional[Mesh] = None, **kw) -> "TaurusEngine":
+        return cls(ctx.params, ctx.bsk_f, ctx.ksk, mesh=mesh, **kw)

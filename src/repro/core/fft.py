@@ -1,0 +1,69 @@
+"""Negacyclic polynomial multiplication via the double-real ("twisted") FFT.
+
+The paper (§IV-C) processes a degree-2^16 polynomial with a 2^15-point
+complex FFT ("double-real FFT").  This module is the mathematical core of
+that trick, in pure JAX:
+
+    forward :  N real coeffs  ->  N/2 complex values
+               u_j = a_j + i * a_{j+N/2}
+               v_j = u_j * exp(i*pi*j/N)            (the "twist")
+               A   = FFT_{N/2}(v)
+    pointwise multiply in the transform domain == negacyclic convolution
+    inverse :  untwist + split real/imag.
+
+`repro.kernels.fourstep_fft` re-implements the FFT itself as the paper's
+heterogeneous 256x128 factorization (MXU matmuls); this module is the
+reference path and is what the CPU engine runs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import torus
+
+
+@functools.lru_cache(maxsize=32)
+def _twist(N: int):
+    import numpy as np
+
+    j = np.arange(N // 2)
+    return jnp.asarray(np.exp(1j * np.pi * j / N), dtype=jnp.complex128)
+
+
+def forward(poly: jax.Array) -> jax.Array:
+    """Real (...,(N,)) -> complex (...,(N/2,)) negacyclic transform.
+
+    Accepts float64 or (u)int coefficient arrays; integers are taken as
+    SIGNED representatives (int64 view for torus values).
+    """
+    N = poly.shape[-1]
+    if jnp.issubdtype(poly.dtype, jnp.unsignedinteger):
+        poly = torus.to_signed(poly)
+    poly = poly.astype(jnp.float64)
+    u = poly[..., : N // 2] + 1j * poly[..., N // 2:]
+    return jnp.fft.fft(u * _twist(N), axis=-1)
+
+
+def inverse(spec: jax.Array) -> jax.Array:
+    """Complex (...,(N/2,)) -> float64 (...,(N,)) coefficients."""
+    N = spec.shape[-1] * 2
+    u = jnp.fft.ifft(spec, axis=-1) * jnp.conj(_twist(N))
+    return jnp.concatenate([jnp.real(u), jnp.imag(u)], axis=-1)
+
+
+def inverse_torus(spec: jax.Array) -> jax.Array:
+    """Inverse transform folded back onto the torus (uint64 mod 2^64)."""
+    return torus.float_to_torus(inverse(spec))
+
+
+def negacyclic_mul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Exact-ish negacyclic product of two integer polys, mod 2^64.
+
+    `a` is expected to hold SMALL integers (e.g. gadget-decomposed digits),
+    `b` arbitrary torus values; this keeps the f64 roundoff below the
+    scheme noise (the paper's 48-bit fixed-point argument, Obs. 4).
+    """
+    return inverse_torus(forward(a) * forward(b))

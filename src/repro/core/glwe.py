@@ -1,0 +1,98 @@
+"""GLWE ciphertexts: the LUT carriers of programmable bootstrapping.
+
+Layout: (..., k+1, N) uint64 = [A_1 .. A_k, B]; each row a polynomial in
+Z_q[X]/(X^N+1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import torus, fft
+from repro.core.params import TFHEParams
+
+U64 = jnp.uint64
+
+
+def keygen(key: jax.Array, k: int, N: int) -> jax.Array:
+    """Binary GLWE secret key: (k, N) uint64 in {0,1}."""
+    return jax.random.bernoulli(key, 0.5, (k, N)).astype(U64)
+
+
+def flatten_key(glwe_key: jax.Array) -> jax.Array:
+    """The 'big' LWE key sample-extract produces ciphertexts under."""
+    return glwe_key.reshape(-1)
+
+
+def encrypt(key: jax.Array, sk: jax.Array, msg_poly: jax.Array, std: float) -> jax.Array:
+    """Encrypt torus polynomial(s) (..., N) -> (..., k+1, N)."""
+    k, N = sk.shape
+    shape = msg_poly.shape[:-1]
+    ka, ke = jax.random.split(key)
+    a = torus.random_torus(ka, shape + (k, N))
+    e = torus.gaussian_noise(ke, shape + (N,), std)
+    # b = sum_i a_i * s_i + m + e  (negacyclic products)
+    prod = fft.inverse_torus(
+        (fft.forward(a) * fft.forward(sk)).sum(axis=-2)
+    )
+    b = prod + msg_poly + e
+    return jnp.concatenate([a, b[..., None, :]], axis=-2)
+
+
+def decrypt_phase(sk: jax.Array, ct: jax.Array) -> jax.Array:
+    a, b = ct[..., :-1, :], ct[..., -1, :]
+    prod = fft.inverse_torus((fft.forward(a) * fft.forward(sk)).sum(axis=-2))
+    return b - prod
+
+
+def trivial(msg_poly: jax.Array, k: int) -> jax.Array:
+    """Noiseless GLWE (A=0, B=m): how LUT accumulators start life."""
+    z = jnp.zeros(msg_poly.shape[:-1] + (k, msg_poly.shape[-1]), dtype=U64)
+    return jnp.concatenate([z, msg_poly[..., None, :].astype(U64)], axis=-2)
+
+
+def rotate(ct: jax.Array, r: jax.Array, N: int) -> jax.Array:
+    """Multiply every polynomial by the monomial X^r, r in [0, 2N).
+
+    Negacyclic: X^N = -1.  Works on any (..., N) trailing-axis layout and
+    traced r (per the blind-rotation loop).
+    """
+    r = jnp.asarray(r, dtype=jnp.uint32).astype(jnp.int64)
+    j = jnp.arange(N, dtype=jnp.int64)
+    src = (j - r) % (2 * N)              # exponent index in [0, 2N)
+    neg = src >= N                        # second copy carries a minus sign
+    idx = jnp.where(neg, src - N, src)
+    vals = jnp.take(ct, idx, axis=-1)
+    return jnp.where(neg, -vals, vals)
+
+
+def sample_extract(ct: jax.Array) -> jax.Array:
+    """Extract the constant coefficient as an LWE ciphertext (paper step D).
+
+    (..., k+1, N) -> (..., k*N+1) under the flattened GLWE key.
+    """
+    *lead, kp1, N = ct.shape
+    a_polys, b_poly = ct[..., :-1, :], ct[..., -1, :]
+    # a'_{i*N + j} = A_i[0] if j == 0 else -A_i[N - j]
+    rev = -a_polys[..., :, ::-1]                         # -A_i[N-1-j']
+    a = jnp.concatenate(
+        [a_polys[..., :, :1], rev[..., :, : N - 1]], axis=-1
+    )  # [A_i[0], -A_i[N-1], ..., -A_i[1]]
+    a = a.reshape(*lead, (kp1 - 1) * N)
+    return jnp.concatenate([a, b_poly[..., :1]], axis=-1)
+
+
+def make_lut_poly(table: jax.Array, params: TFHEParams) -> jax.Array:
+    """Encode a plaintext LUT f: [0, 2^width) -> [0, 2^width) as the test
+    polynomial V (torus coefficients), pre-rotated by half a slot so the
+    rounding window is centred (standard Concrete construction).
+
+    table: (2^width,) integer outputs.
+    """
+    N, width = params.N, params.width
+    reps = N // (1 << width)
+    vals = torus.encode(jnp.asarray(table, dtype=U64), params.delta)
+    v = jnp.repeat(vals, reps)                            # (N,)
+    # multiply by X^{-reps/2}: rotate by 2N - reps//2
+    v = rotate(v, jnp.asarray(2 * N - reps // 2), N)
+    return v

@@ -1,0 +1,58 @@
+"""Torus arithmetic on q = 2^64 (uint64 wraparound).
+
+A torus element t in [0,1) is stored as round(t * 2^64) mod 2^64.
+All additions/multiplications below are exact mod-2^64 wraparound ops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+U64 = jnp.uint64
+I64 = jnp.int64
+
+
+def to_signed(x: jax.Array) -> jax.Array:
+    """Reinterpret uint64 as two's-complement int64 (no value change mod q)."""
+    return x.astype(I64)
+
+
+def to_unsigned(x: jax.Array) -> jax.Array:
+    return x.astype(U64)
+
+
+def encode(msg: jax.Array, delta: int) -> jax.Array:
+    """Integer message -> torus: m * delta mod q."""
+    return (msg.astype(U64) * U64(delta)).astype(U64)
+
+
+def decode(t: jax.Array, delta: int, modulus: int) -> jax.Array:
+    """Torus -> integer message: round(t / delta) mod message-modulus."""
+    half = U64(delta >> 1)
+    return ((t + half) // U64(delta)).astype(U64) % U64(modulus)
+
+
+def random_torus(key: jax.Array, shape) -> jax.Array:
+    return jax.random.bits(key, shape, dtype=U64)
+
+
+def gaussian_noise(key: jax.Array, shape, std: float) -> jax.Array:
+    """Gaussian noise with std given in torus units, wrapped to uint64."""
+    e = jax.random.normal(key, shape, dtype=jnp.float64) * (std * 2.0**64)
+    # Round-to-nearest then wrap mod 2^64. f64 -> i64 saturates at +-2^63,
+    # which is fine: std*2^64 << 2^63 for any sane parameter set.
+    return jnp.round(e).astype(I64).astype(U64)
+
+
+def float_to_torus(x: jax.Array) -> jax.Array:
+    """Round a float64 array (arbitrary magnitude) to uint64 mod 2^64.
+
+    Split into hi/lo parts while still in float space (both splits are
+    EXACT f64 ops), then wrap in integer space — wrapping in f64 would
+    destroy low bits near 2^64 (ulp there is 2^11).  Valid for |x| < 2^95.
+    """
+    hi = jnp.round(x / 2.0**32)
+    lo = x - hi * 2.0**32                 # exact; in [-2^31, 2^31]
+    return (
+        (hi.astype(I64) << I64(32)) + jnp.round(lo).astype(I64)
+    ).astype(U64)

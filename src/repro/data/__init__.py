@@ -1,0 +1,2 @@
+"""Deterministic sharded synthetic data pipeline."""
+from repro.data.pipeline import DataConfig, SyntheticLMData  # noqa: F401

@@ -1,0 +1,71 @@
+"""Deterministic, resumable, sharded synthetic LM data pipeline.
+
+Production shape without external deps: every batch is a pure function of
+(seed, step), so any worker can regenerate any batch — exactly the
+property elastic restarts and straggler re-execution need (no data-state
+checkpointing beyond the step counter).
+
+The token stream is a mixture of Zipf-distributed unigrams and short
+Markov motifs, giving a non-degenerate loss curve (a pure-uniform stream
+has constant CE and hides training bugs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    motif_len: int = 8
+    n_motifs: int = 64
+
+
+class SyntheticLMData:
+    """batch(step) -> {"tokens", "labels"} (next-token LM pairs)."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        # Zipf unigram table (clipped to vocab)
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        p = ranks ** (-cfg.zipf_a)
+        self._probs = jnp.asarray(p / p.sum(), jnp.float32)
+        self._motifs = jnp.asarray(
+            rng.integers(0, cfg.vocab_size,
+                         (cfg.n_motifs, cfg.motif_len)), jnp.int32)
+
+    def batch(self, step: int) -> dict:
+        cfg = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+        k1, k2, k3 = jax.random.split(key, 3)
+        B, S = cfg.global_batch, cfg.seq_len
+        toks = jax.random.categorical(
+            k1, jnp.log(self._probs)[None, None, :],
+            shape=(B, S + 1)).astype(jnp.int32)  # dtype-stable under x64
+        # overwrite random windows with motifs (learnable structure)
+        n_inj = max(1, S // (4 * cfg.motif_len))
+        starts = jax.random.randint(k2, (B, n_inj), 0, S - cfg.motif_len,
+                                    dtype=jnp.int32)
+        which = jax.random.randint(k3, (B, n_inj), 0, cfg.n_motifs,
+                                   dtype=jnp.int32)
+
+        def inject_row(row, st, wh):
+            def one(row, args):
+                s, w = args
+                return jax.lax.dynamic_update_slice(
+                    row, self._motifs[w], (s,)), None
+            row, _ = jax.lax.scan(one, row, (st, wh))
+            return row
+        toks = jax.vmap(inject_row)(toks, starts, which)
+        return {"tokens": toks[:, :-1].astype(jnp.int32),
+                "labels": toks[:, 1:].astype(jnp.int32)}

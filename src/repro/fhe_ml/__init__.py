@@ -1,0 +1,6 @@
+"""FHE-ML bridge: post-training quantization of model-zoo blocks, lowering
+to the FHE IR, and real encrypted execution on the JAX TFHE engine —
+the paper's GPT-2-under-FHE demonstration at laptop scale."""
+from repro.fhe_ml.quantize import QuantSpec, quantize_affine, dequantize  # noqa: F401
+from repro.fhe_ml.lower import lower_mlp, lower_gpt2_block  # noqa: F401
+from repro.fhe_ml.executor import FheExecutor  # noqa: F401

@@ -1,0 +1,177 @@
+"""Execute FHE IR graphs — plaintext integer oracle + real encrypted run.
+
+`interpret(graph, inputs, width)` is the integer-semantics oracle (every
+value lives mod 2^width, exactly like the torus encoding).
+
+`FheExecutor` runs the same graph on REAL TFHE ciphertexts through the
+batched TaurusEngine, with both compiler optimizations live:
+  * KS-dedup — key-switch results cached per source node and reused by
+    every LUT that reads that node (the engine counts them);
+  * ACC-dedup — one GLWE test polynomial per unique table, shared across
+    all ciphertext elements that apply it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.compiler.ir import Graph
+from repro.core import glwe, lwe, torus
+from repro.core import batch as batch_mod
+from repro.core.params import TFHEParams
+
+U64 = jnp.uint64
+
+
+# --------------------------------------------------------------------------
+# plaintext integer oracle (defines correctness)
+# --------------------------------------------------------------------------
+
+def interpret(g: Graph, inputs: list, width: int,
+              check_range: bool = True) -> dict:
+    """inputs: list of int arrays (flattened per input node).
+    Returns {node_id: int array} for every node, values mod 2^width.
+
+    check_range enforces the Concrete compile-time guarantee: every value
+    ENTERING a LUT must lie in [0, 2^width) *before* wrapping — outside
+    that window real PBS negacyclically flips the result and the plain
+    mod-2^w oracle would silently diverge from the encrypted run.
+    Linear values are tracked UNBOUNDED for this check and reduced
+    mod 2^width only at LUTs/outputs (torus decode semantics).
+    """
+    mod = 1 << width
+    vals: dict = {}              # unbounded integer tracking
+    it = iter(inputs)
+    for n in g.nodes:
+        if n.op == "input":
+            vals[n.id] = np.asarray(next(it), np.int64)
+        elif n.op == "add":
+            vals[n.id] = vals[n.inputs[0]] + vals[n.inputs[1]]
+        elif n.op == "sub":
+            vals[n.id] = vals[n.inputs[0]] - vals[n.inputs[1]]
+        elif n.op == "addc":
+            vals[n.id] = vals[n.inputs[0]] + np.asarray(n.attrs["const"],
+                                                        np.int64)
+        elif n.op == "mulc":
+            vals[n.id] = vals[n.inputs[0]] * np.asarray(n.attrs["const"],
+                                                        np.int64)
+        elif n.op == "linear":
+            W = np.asarray(n.attrs["W"], np.int64)
+            x = vals[n.inputs[0]].reshape(-1, W.shape[0])
+            y = x @ W
+            if n.attrs.get("bias") is not None:
+                y = y + np.asarray(n.attrs["bias"], np.int64)
+            vals[n.id] = y.reshape(-1)
+        elif n.op == "lut":
+            v = vals[n.inputs[0]]
+            if check_range and (v.min() < 0 or v.max() >= mod):
+                raise OverflowError(
+                    f"LUT input out of [0, {mod}) at node {n.id} "
+                    f"(range [{v.min()}, {v.max()}]): PBS would flip "
+                    f"negacyclically — resize weights/activation widths")
+            t = np.asarray(n.attrs["table"], np.int64)
+            vals[n.id] = t[v % mod] % mod
+        elif n.op in ("reshape", "concat"):
+            vals[n.id] = vals[n.inputs[0]]
+        else:
+            raise ValueError(n.op)
+    return {k: np.asarray(v) % mod for k, v in vals.items()}
+
+
+# --------------------------------------------------------------------------
+# encrypted executor
+# --------------------------------------------------------------------------
+
+class FheExecutor:
+    """Runs a graph on real ciphertexts via the batched engine."""
+
+    def __init__(self, ctx, *, ks_dedup: bool = True, acc_dedup: bool = True):
+        self.ctx = ctx                      # TFHEContext (keys + params)
+        self.params: TFHEParams = ctx.params
+        self.ks_dedup = ks_dedup
+        self.acc_dedup = acc_dedup
+        self.stats = {"pbs": 0, "keyswitch": 0, "lut_polys": 0}
+        self._lut_cache: dict = {}
+
+    # -- client side --------------------------------------------------------
+    def encrypt_inputs(self, key: jax.Array, inputs: list) -> list:
+        out = []
+        for i, arr in enumerate(inputs):
+            key, sub = jax.random.split(key)
+            out.append(self.ctx.encrypt(sub, np.asarray(arr).reshape(-1)))
+        return out
+
+    def decrypt(self, ct):
+        return np.asarray(self.ctx.decrypt(ct))
+
+    # -- helpers --------------------------------------------------------------
+    def _lut_poly(self, table: np.ndarray):
+        key = table.tobytes() if self.acc_dedup else object()
+        if key not in self._lut_cache:
+            self._lut_cache[key] = glwe.make_lut_poly(
+                jnp.asarray(table, U64), self.params)
+            self.stats["lut_polys"] += 1
+        return self._lut_cache[key]
+
+    def _pbs(self, cts, table, small_cache_key, ks_cache):
+        """PBS with the KS-first order so key-switch results are reusable."""
+        p = self.params
+        if self.ks_dedup and small_cache_key in ks_cache:
+            small = ks_cache[small_cache_key]
+        else:
+            small = batch_mod.keyswitch_batch(cts, self.ctx.ksk, p)
+            self.stats["keyswitch"] += int(cts.shape[0])
+            ks_cache[small_cache_key] = small
+        ms = lwe.mod_switch(small, p.log2_N + 1)
+        poly = self._lut_poly(table)
+        luts = glwe.trivial(jnp.broadcast_to(poly, (cts.shape[0], p.N)), p.k)
+        acc = batch_mod.blind_rotate_batch(luts, ms, self.ctx.bsk_f, p)
+        self.stats["pbs"] += int(cts.shape[0])
+        return glwe.sample_extract(acc)
+
+    # -- run ------------------------------------------------------------------
+    def run(self, g: Graph, enc_inputs: list) -> dict:
+        p = self.params
+        delta = p.delta
+        vals: dict = {}
+        ks_cache: dict = {}
+        it = iter(enc_inputs)
+        for n in g.nodes:
+            if n.op == "input":
+                vals[n.id] = next(it)
+            elif n.op == "add":
+                vals[n.id] = lwe.add(vals[n.inputs[0]], vals[n.inputs[1]])
+            elif n.op == "sub":
+                vals[n.id] = lwe.sub(vals[n.inputs[0]], vals[n.inputs[1]])
+            elif n.op == "addc":
+                c = torus.encode(jnp.asarray(
+                    np.asarray(n.attrs["const"], np.int64).reshape(-1)
+                    % (1 << p.width), dtype=U64), delta)
+                x = vals[n.inputs[0]]
+                c = jnp.broadcast_to(c, x.shape[:-1])
+                vals[n.id] = x.at[..., -1].add(c)
+            elif n.op == "mulc":
+                c = np.asarray(n.attrs["const"], np.int64).reshape(-1)
+                vals[n.id] = vals[n.inputs[0]] * jnp.asarray(
+                    c, jnp.int64)[:, None].astype(U64)
+            elif n.op == "linear":
+                W = jnp.asarray(np.asarray(n.attrs["W"], np.int64))
+                x = vals[n.inputs[0]]                      # (in, big_n+1)
+                y = jnp.einsum("io,id->od", W.astype(U64), x)
+                if n.attrs.get("bias") is not None:
+                    b = torus.encode(jnp.asarray(
+                        np.asarray(n.attrs["bias"], np.int64).reshape(-1)
+                        % (1 << p.width), U64), delta)
+                    y = y.at[..., -1].add(b)
+                vals[n.id] = y
+            elif n.op == "lut":
+                vals[n.id] = self._pbs(vals[n.inputs[0]],
+                                       np.asarray(n.attrs["table"]),
+                                       n.inputs[0], ks_cache)
+            elif n.op in ("reshape", "concat"):
+                vals[n.id] = vals[n.inputs[0]]
+            else:
+                raise ValueError(n.op)
+        return vals

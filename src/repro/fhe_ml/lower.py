@@ -1,0 +1,129 @@
+"""Lower quantized NN blocks to the FHE IR (Concrete-ML style).
+
+RANGE DISCIPLINE (what Concrete's optimizer guarantees at compile time):
+every value entering a LUT must lie in [0, 2^width) — one padding bit —
+otherwise programmable bootstrapping negacyclically flips the result
+(dec = 2^w - T[x]).  Lowerings here keep signed accumulators as
+OFFSET-shifted unsigned values (offset = 2^(width-1)) and size weights /
+activation widths so the bound holds; `executor.interpret(...,
+check_range=True)` verifies it on every run.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.compiler.ir import Graph, FheTensor, trace
+from repro.fhe_ml.quantize import QuantSpec
+
+
+def _gelu(x):
+    return x * 0.5 * (1 + np.tanh(0.7978845608 * (x + 0.044715 * x ** 3)))
+
+
+def _clip_w(w, mag=1):
+    """Quantize weights to small ints {-mag..mag}; returns (W, scale)."""
+    s = (np.max(np.abs(w)) + 1e-9) / mag
+    return np.clip(np.round(w / s), -mag, mag).astype(np.int64), s
+
+
+def _requant_lut(width: int, offset: int, acc_scale: float, out_qmax: int,
+                 out_zero: int, out_scale: float, fn=None) -> np.ndarray:
+    """Index i = acc + offset; signed acc = i - offset; output quantized
+    to [0, out_qmax]."""
+    n = 1 << width
+    acc = np.arange(n) - offset
+    xs = acc * acc_scale
+    if fn is not None:
+        xs = fn(xs)
+    q = np.round(xs / out_scale) + out_zero
+    return np.clip(q, 0, out_qmax).astype(np.uint64)
+
+
+def lower_mlp(w1: np.ndarray, w2: np.ndarray, in_spec: QuantSpec,
+              width: int, act="gelu"):
+    """x -> requant(GELU(x@W1)) @ W2 -> requant, range-safe for `width`.
+
+    Bounds: inputs q in [0, in_qmax], weights in {-1,0,1}:
+      |acc1| <= in_qmax * d_in   and   |acc2| <= h_qmax * d_h,
+    both required < 2^(width-1).
+    """
+    offset = 1 << (width - 1)
+    fn = _gelu if act == "gelu" else (lambda x: np.maximum(x, 0))
+    W1, s1 = _clip_w(w1)
+    W2, s2 = _clip_w(w2)
+    d_in, d_h = W1.shape
+
+    h_qmax = 3                               # 2-bit hidden activations
+    assert in_spec.qmax * d_in < offset, "acc1 overflows the padding bit"
+    assert h_qmax * d_h < offset, "acc2 overflows the padding bit"
+
+    acc1_scale = in_spec.scale * s1
+    h_scale = acc1_scale * in_spec.qmax * d_in / (2 * h_qmax)
+    h_spec = QuantSpec(width, h_scale, h_qmax // 2 + 1)
+    acc2_scale = h_scale * s2
+    out_qmax = (1 << width) - 1
+    out_scale = acc2_scale * h_qmax * d_h / out_qmax
+    out_spec = QuantSpec(width, out_scale, offset // 2)
+
+    t1 = _requant_lut(width, offset, acc1_scale, h_qmax, h_spec.zero,
+                      h_spec.scale, fn)
+    t2 = _requant_lut(width, offset, acc2_scale, out_qmax, out_spec.zero,
+                      out_spec.scale, None)
+
+    def f(x):
+        a = x.linear(W1) + (offset - in_spec.zero * W1.sum(axis=0))
+        h = a.lut(t1, name="gelu_requant")
+        b = h.linear(W2) + (offset - h_spec.zero * W2.sum(axis=0))
+        return b.lut(t2, name="out_requant")
+    g = trace(f, (d_in,))
+    meta = {"in_spec": in_spec, "h_spec": h_spec, "out_spec": out_spec,
+            "W1": W1, "W2": W2, "s1": s1, "s2": s2, "offset": offset}
+    return g, meta
+
+
+def lower_gpt2_block(d: int, in_spec: QuantSpec, width: int, seed=0):
+    """Reduced single-head GPT-2-style block under FHE: ct*ct attention
+    via requantized square LUTs, GELU MLP.  All LUT inputs provably in
+    [0, 2^width) for 3-bit activations and {-1,0,1} weights (see asserts).
+    """
+    rng = np.random.default_rng(seed)
+    offset = 1 << (width - 1)
+    n = 1 << width
+    a_qmax = 7                               # 3-bit activation lattice
+
+    Wq = rng.integers(-1, 2, (d, d)).astype(np.int64)
+    Wk = rng.integers(-1, 2, (d, d)).astype(np.int64)
+    Wv = rng.integers(-1, 2, (d, d)).astype(np.int64)
+    W1 = rng.integers(-1, 2, (d, 2 * d)).astype(np.int64)
+    W2 = rng.integers(-1, 2, (2 * d, d)).astype(np.int64)
+    assert in_spec.qmax * d < offset
+    assert a_qmax * d < offset and a_qmax * 2 * d < 2 * offset
+
+    # 3-bit requant of a signed accumulator
+    req3 = np.clip((np.arange(n) - offset) // 8 + 4, 0, a_qmax).astype(np.uint64)
+    # requantized square: ((i-offset)^2 >> 3), clipped to 3 bits
+    sq3 = np.clip(((np.arange(n) - offset) ** 2) >> 3, 0, a_qmax).astype(np.uint64)
+    # gelu-ish on the shifted lattice, 2-bit output (keeps acc2 in range)
+    gel2 = np.clip(np.round(_gelu((np.arange(n) - offset) / 8.0)) + 1,
+                   0, 3).astype(np.uint64)
+
+    def ct_mul(a: FheTensor, b: FheTensor):
+        """Square-trick product, requantized to 3 bits.
+        inputs in [0,7] => a+b in [0,14], a-b in [-7,7]: both +offset are
+        in range; sq3 outputs [0,7]; s-dif in [-7,7] => final in range."""
+        s = (a + b + (offset - 7)).lut(sq3, name="sq+")
+        dif = (a - b + offset).lut(sq3, name="sq-")
+        return (s - dif + offset).lut(req3, name="req_mul")
+
+    def f(x):
+        q = (x.linear(Wq) + offset).lut(req3, name="req_q")
+        k = (x.linear(Wk) + offset).lut(req3, name="req_k")
+        v = (x.linear(Wv) + offset).lut(req3, name="req_v")
+        s = ct_mul(q, k)
+        pv = ct_mul(s, v)
+        h = (pv.linear(W1) + offset).lut(gel2, name="gelu")
+        o = (h.linear(W2) + offset).lut(req3, name="req_out")
+        return o
+    g = trace(f, (d,))
+    return g, {"Wq": Wq, "Wk": Wk, "Wv": Wv, "W1": W1, "W2": W2,
+               "offset": offset}

@@ -1,0 +1,52 @@
+"""Post-training affine quantization (Concrete-ML style).
+
+Activations and weights quantize to `width`-bit unsigned integers with
+per-tensor scale/zero-point; matmul accumulators re-quantize through a
+LUT (the "requant" PBS every FHE DNN layer ends with).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    width: int
+    scale: float
+    zero: int
+
+    @property
+    def qmax(self) -> int:
+        return (1 << self.width) - 1
+
+
+def calibrate(x: np.ndarray, width: int) -> QuantSpec:
+    lo, hi = float(np.min(x)), float(np.max(x))
+    lo = min(lo, 0.0)
+    hi = max(hi, lo + 1e-8)
+    scale = (hi - lo) / ((1 << width) - 1)
+    zero = int(round(-lo / scale))
+    return QuantSpec(width, scale, zero)
+
+
+def quantize_affine(x: np.ndarray, spec: QuantSpec) -> np.ndarray:
+    q = np.round(x / spec.scale) + spec.zero
+    return np.clip(q, 0, spec.qmax).astype(np.int64)
+
+
+def dequantize(q: np.ndarray, spec: QuantSpec) -> np.ndarray:
+    return (q.astype(np.float64) - spec.zero) * spec.scale
+
+
+def requant_table(in_scale: float, in_zero: float, out: QuantSpec,
+                  in_width: int, fn=None) -> np.ndarray:
+    """LUT mapping an accumulator value (in_width bits) to the next
+    layer's quantized activation, optionally through `fn` (e.g. GELU)."""
+    n = 1 << in_width
+    xs = (np.arange(n, dtype=np.float64) - in_zero) * in_scale
+    if fn is not None:
+        xs = fn(xs)
+    q = np.round(xs / out.scale) + out.zero
+    return np.clip(q, 0, out.qmax).astype(np.uint64)

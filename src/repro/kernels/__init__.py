@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots the paper builds silicon for.
+
+  fourstep_fft      — the paper's heterogeneous FFT-A(256)xFFT-B(128)
+                      cluster, recast as MXU matmuls (four-step FFT).
+  external_product  — the BRU transform-domain MAC with round-robin
+                      (batched) BSK reuse.
+  keyswitch         — the LPU key-switch MAC; 64-bit torus arithmetic
+                      synthesized from uint32 limbs (TPU has no u64).
+
+Each kernel ships jit wrappers in `ops.py` and a pure-jnp oracle in
+`ref.py`; tests sweep shapes/dtypes in interpret mode.
+"""

@@ -1,0 +1,57 @@
+"""BRU transform-domain MAC kernel (paper Fig. 7 bottom).
+
+Computes, for a whole round-robin batch of ciphertexts against ONE shared
+BSK slice (the key-reuse strategy):
+
+    out[b, k, f] = sum_j dig[b, j, f] * bsk[j, k, f]        (complex)
+
+with j = (k_dim+1)*level decomposition rows, k = k_dim+1 output polys,
+f the transform-domain coefficient.  The BSK block is loaded into VMEM
+once per grid step and consumed by every ciphertext in the batch —
+arithmetic intensity on the BSK stream scales with B, which is exactly
+why Taurus round-robins 12 ciphertexts per core.
+
+Layouts (stacked re/im f32 planes):
+    dig: (B, 2, J, F)     bsk: (2, J, K, F)     out: (B, 2, K, F)
+The grid tiles F (VMEM-sized chunks, multiples of 128 lanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(dig_ref, bsk_ref, o_ref):
+    dr = dig_ref[:, 0]            # (B, J, Fb)
+    di = dig_ref[:, 1]
+    wr = bsk_ref[0]               # (J, K, Fb)
+    wi = bsk_ref[1]
+    # out[b,k,f] = sum_j d[b,j,f] * w[j,k,f]
+    outr = jnp.einsum("bjf,jkf->bkf", dr, wr) - jnp.einsum("bjf,jkf->bkf", di, wi)
+    outi = jnp.einsum("bjf,jkf->bkf", dr, wi) + jnp.einsum("bjf,jkf->bkf", di, wr)
+    o_ref[:, 0] = outr
+    o_ref[:, 1] = outi
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def external_product_mac(dig: jax.Array, bsk: jax.Array, *,
+                         block_f: int = 2048, interpret: bool = True) -> jax.Array:
+    """dig (B,2,J,F) f32, bsk (2,J,K,F) f32 -> (B,2,K,F) f32."""
+    B, _, J, F = dig.shape
+    _, _, K, _ = bsk.shape
+    bf = min(block_f, F)
+    assert F % bf == 0
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((B, 2, K, F), jnp.float32),
+        grid=(F // bf,),
+        in_specs=[
+            pl.BlockSpec((B, 2, J, bf), lambda f: (0, 0, 0, f)),
+            pl.BlockSpec((2, J, K, bf), lambda f: (0, 0, 0, f)),
+        ],
+        out_specs=pl.BlockSpec((B, 2, K, bf), lambda f: (0, 0, 0, f)),
+        interpret=interpret,
+    )(dig.astype(jnp.float32), bsk.astype(jnp.float32))

@@ -1,0 +1,141 @@
+"""Four-step negacyclic FFT as MXU matmuls (paper §IV-C, adapted to TPU).
+
+The paper factors its 2^15-point double-real FFT into heterogeneous
+256-point (FFT-A) and 128-point (FFT-B) units joined by a shutter
+transpose.  On TPU the same factorization M = R*C maps onto the MXU:
+
+    stage A:  DFT_R  @ X      (column transforms — one matmul)
+    twiddle:  elementwise W^(k1*c)
+    stage B:  X @ DFT_C^T     (row transforms — one matmul)
+
+The shutter-transpose becomes the (free) matmul operand layout change.
+Complex arithmetic is carried as separate re/im f32 planes (stacked
+axis), i.e. 4 real matmuls per complex matmul.
+
+Layout contract (matches `repro.core.fft` up to dtype):
+    forward:  real coeffs (B, N) -> spectrum (B, 2, M), M = N/2,
+              spectrum[m] = FFT_M(fold+twist(x))[m]
+    inverse:  spectrum (B, 2, M) -> real coeffs (B, N)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def factor_m(M: int) -> tuple[int, int]:
+    """Pick R*C = M mirroring the paper's 256x128 for M = 2^15."""
+    assert M & (M - 1) == 0 and M >= 4
+    lg = M.bit_length() - 1
+    r = min(256, 1 << ((lg + 1) // 2))
+    return r, M // r
+
+
+@functools.lru_cache(maxsize=16)
+def _constants(N: int, inverse: bool):
+    """Precompute twist, DFT matrices, twiddles as stacked re/im f32."""
+    M = N // 2
+    R, C = factor_m(M)
+    j = np.arange(M)
+    twist = np.exp(1j * np.pi * j / N)                       # fold twist
+    dft_r = np.exp(-2j * np.pi * np.outer(np.arange(R), np.arange(R)) / R)
+    dft_c = np.exp(-2j * np.pi * np.outer(np.arange(C), np.arange(C)) / C)
+    tw = np.exp(-2j * np.pi * np.outer(np.arange(R), np.arange(C)) / M)
+    if inverse:
+        dft_r, dft_c, tw, twist = (
+            np.conj(dft_r) / R, np.conj(dft_c) / C, np.conj(tw), np.conj(twist))
+    # NB: cache plain numpy (never jnp) — a jnp constant created inside a
+    # jit trace is a Tracer and would leak through the lru_cache.
+    as32 = lambda z: np.stack([z.real, z.imag]).astype(np.float32)
+    return R, C, as32(twist), as32(dft_r), as32(dft_c), as32(tw)
+
+
+def _cmatmul(ar, ai, br, bi):
+    """(ar+i*ai) @ (br+i*bi) with f32 accumulation on the MXU."""
+    dot = lambda x, y: jnp.dot(x, y, preferred_element_type=jnp.float32)
+    return dot(ar, br) - dot(ai, bi), dot(ar, bi) + dot(ai, br)
+
+
+def _fwd_kernel(x_ref, twist_ref, dr_ref, dc_ref, tw_ref, o_ref, *, R, C, M):
+    x = x_ref[0]                                   # (N,) real coeffs
+    # fold + twist: u = (x_lo + i x_hi) * twist
+    ur = x[:M] * twist_ref[0] - x[M:] * twist_ref[1]
+    ui = x[:M] * twist_ref[1] + x[M:] * twist_ref[0]
+    ar, ai = ur.reshape(R, C), ui.reshape(R, C)
+    # stage A (FFT-A analogue): column DFT via MXU
+    er, ei = _cmatmul(dr_ref[0], dr_ref[1], ar, ai)
+    # twiddle (between-stage rotation)
+    br = er * tw_ref[0] - ei * tw_ref[1]
+    bi = er * tw_ref[1] + ei * tw_ref[0]
+    # stage B (FFT-B analogue): row DFT; transpose-of-output IS the
+    # paper's shutter transpose, folded into the store layout.
+    fr, fi = _cmatmul(br, bi, dc_ref[0].T, dc_ref[1].T)
+    o_ref[0, 0] = fr.T.reshape(M)
+    o_ref[0, 1] = fi.T.reshape(M)
+
+
+def _inv_kernel(s_ref, twist_ref, dr_ref, dc_ref, tw_ref, o_ref, *, R, C, M):
+    sr = s_ref[0, 0].reshape(C, R).T               # undo output transpose
+    si = s_ref[0, 1].reshape(C, R).T
+    # inverse stage B
+    br, bi = _cmatmul(sr, si, dc_ref[0].T, dc_ref[1].T)
+    # un-twiddle
+    er = br * tw_ref[0] - bi * tw_ref[1]
+    ei = br * tw_ref[1] + bi * tw_ref[0]
+    # inverse stage A
+    ar, ai = _cmatmul(dr_ref[0], dr_ref[1], er, ei)
+    ur, ui = ar.reshape(M), ai.reshape(M)
+    # untwist + unfold
+    xr = ur * twist_ref[0] - ui * twist_ref[1]
+    xi = ur * twist_ref[1] + ui * twist_ref[0]
+    o_ref[0] = jnp.concatenate([xr, xi])
+
+
+def _const_specs(R, C, M):
+    full = lambda shape: pl.BlockSpec(shape, lambda b: (0,) * len(shape))
+    return [
+        full((2, M)),          # twist
+        full((2, R, R)),       # DFT_R
+        full((2, C, C)),       # DFT_C
+        full((2, R, C)),       # twiddle
+    ]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fft_forward(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Negacyclic forward transform: real (B, N) f32 -> (B, 2, N/2) f32."""
+    B, N = x.shape
+    M = N // 2
+    R, C = factor_m(M)
+    _, _, twist, dr, dc, tw = _constants(N, inverse=False)
+    kernel = functools.partial(_fwd_kernel, R=R, C=C, M=M)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((B, 2, M), jnp.float32),
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, N), lambda b: (b, 0))] + _const_specs(R, C, M),
+        out_specs=pl.BlockSpec((1, 2, M), lambda b: (b, 0, 0)),
+        interpret=interpret,
+    )(x.astype(jnp.float32), twist, dr, dc, tw)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fft_inverse(spec: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Inverse: (B, 2, M) f32 -> real coeffs (B, 2M) f32."""
+    B, _, M = spec.shape
+    N = 2 * M
+    R, C = factor_m(M)
+    _, _, twist, dr, dc, tw = _constants(N, inverse=True)
+    kernel = functools.partial(_inv_kernel, R=R, C=C, M=M)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, 2, M), lambda b: (b, 0, 0))] + _const_specs(R, C, M),
+        out_specs=pl.BlockSpec((1, N), lambda b: (b, 0)),
+        interpret=interpret,
+    )(spec.astype(jnp.float32), twist, dr, dc, tw)

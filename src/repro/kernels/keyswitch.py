@@ -1,0 +1,120 @@
+"""LPU key-switch MAC kernel: 64-bit torus arithmetic from uint32 limbs.
+
+TPU has no uint64 — the paper's LPU is a 64-bit integer vector unit, so
+the TPU adaptation synthesizes mod-2^64 arithmetic from uint32 limb pairs
+(hi, lo) with explicit carries.  16-bit sub-limb partial products keep
+every intermediate inside uint32.
+
+Computes   acc[b, t] = sum_{s} d[b, s] * K[s, t]   (mod 2^64)
+
+where s flattens (n_from, level), d are signed gadget digits (int32,
+interpreted mod 2^64 as two's complement), and K is the key-switching key
+as (hi, lo) uint32 planes.  The caller forms  out = (0..0, b) - acc.
+
+Accumulation strategy (fully vectorized, no sequential carries): partial
+products are accumulated per 16-bit lane into uint32 accumulators, then
+lanes are recombined with carry propagation once per block.  A block of
+S_BLK <= 4096 terms keeps every lane accumulator < 2^32.  Blocks combine
+across grid steps mod 2^64 (sequential grid accumulation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+import numpy as np
+
+U32 = np.uint32
+MASK16 = np.uint32(0xFFFF)
+
+
+def _mul64(du_hi, du_lo, k_hi, k_lo):
+    """(du_hi,du_lo) * (k_hi,k_lo) mod 2^64, all uint32, via 16-bit parts.
+
+    Broadcasting: du_* are (..., 1), k_* are (S, T)-shaped blocks.
+    Returns (hi, lo) uint32.
+    """
+    a0 = du_lo & MASK16
+    a1 = du_lo >> U32(16)
+    b0 = k_lo & MASK16
+    b1 = k_lo >> U32(16)
+    # full 64-bit product of the two low words
+    p00 = a0 * b0                       # < 2^32
+    p01 = a0 * b1
+    p10 = a1 * b0
+    p11 = a1 * b1
+    mid = p01 + p10                     # may wrap: detect carry
+    mid_c = (mid < p01).astype(U32)     # carry into bit 32 of (mid << 16)
+    lo = p00 + (mid << U32(16))
+    lo_c = (lo < p00).astype(U32)
+    hi = p11 + (mid >> U32(16)) + (mid_c << U32(16)) + lo_c
+    # cross terms only affect the high word (mod 2^64)
+    hi = hi + du_lo * k_hi + du_hi * k_lo
+    return hi, lo
+
+
+def _kernel(d_ref, khi_ref, klo_ref, ohi_ref, olo_ref):
+    sblk = d_ref.shape[1]
+    d = d_ref[0]                                 # (S,) int32 digits
+    du_lo = d.astype(U32)[:, None]               # two's complement low word
+    du_hi = (d >> 31).astype(U32)[:, None]       # sign-extension high word
+    k_hi = khi_ref[...]                          # (S, T)
+    k_lo = klo_ref[...]
+    p_hi, p_lo = _mul64(du_hi, du_lo, k_hi, k_lo)
+
+    # lane-wise accumulation: sum 16-bit lanes of p_lo/p_hi in uint32.
+    # Each lane sum < S_BLK * 2^16 <= 2^28 for S_BLK <= 4096.
+    s_lo0 = jnp.sum(p_lo & MASK16, axis=0, dtype=U32)
+    s_lo1 = jnp.sum(p_lo >> U32(16), axis=0, dtype=U32)
+    s_hi0 = jnp.sum(p_hi & MASK16, axis=0, dtype=U32)
+    s_hi1 = jnp.sum(p_hi >> U32(16), axis=0, dtype=U32)
+    # recombine with carries
+    blk_lo = s_lo0 + (s_lo1 << U32(16))
+    carry = (s_lo1 + (s_lo0 >> U32(16))) >> U32(16)
+    blk_hi = s_hi0 + (s_hi1 << U32(16)) + carry
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        ohi_ref[...] = jnp.zeros_like(ohi_ref)
+        olo_ref[...] = jnp.zeros_like(olo_ref)
+
+    acc_lo = olo_ref[0] + blk_lo
+    acc_hi = ohi_ref[0] + blk_hi + (acc_lo < olo_ref[0]).astype(U32)
+    olo_ref[0] = acc_lo
+    ohi_ref[0] = acc_hi
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def keyswitch_mac(digits: jax.Array, ksk_hi: jax.Array, ksk_lo: jax.Array, *,
+                  block_s: int = 1024, interpret: bool = True):
+    """digits (B, S) int32, ksk_hi/lo (S, T) uint32 -> (hi, lo) (B, T) uint32.
+
+    S flattens (n_from * level); T = n_to + 1.
+    """
+    B, S = digits.shape
+    _, T = ksk_hi.shape
+    bs = min(block_s, S)
+    assert S % bs == 0 and bs <= 4096
+    grid = (B, S // bs)
+    out_shape = [
+        jax.ShapeDtypeStruct((B, T), U32),
+        jax.ShapeDtypeStruct((B, T), U32),
+    ]
+    return pl.pallas_call(
+        _kernel,
+        out_shape=out_shape,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs), lambda b, s: (b, s)),
+            pl.BlockSpec((bs, T), lambda b, s: (s, 0)),
+            pl.BlockSpec((bs, T), lambda b, s: (s, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, T), lambda b, s: (b, 0)),
+            pl.BlockSpec((1, T), lambda b, s: (b, 0)),
+        ],
+        interpret=interpret,
+    )(digits.astype(jnp.int32), ksk_hi, ksk_lo)

@@ -1,0 +1,40 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+`interpret=True` everywhere in this container (CPU); on a real TPU the
+flag flips to False with identical call signatures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fourstep_fft, external_product, keyswitch, ref
+
+INTERPRET = True  # no TPU in this container; see DESIGN.md §5
+
+
+def negacyclic_fft(x: jax.Array) -> jax.Array:
+    """Forward negacyclic transform, (B, N) real -> (B, 2, N/2) f32."""
+    return fourstep_fft.fft_forward(x, interpret=INTERPRET)
+
+
+def negacyclic_ifft(spec: jax.Array) -> jax.Array:
+    """(B, 2, M) -> (B, 2M) f32 coefficients."""
+    return fourstep_fft.fft_inverse(spec, interpret=INTERPRET)
+
+
+def bru_mac(dig: jax.Array, bsk: jax.Array, *, block_f: int = 2048) -> jax.Array:
+    """Blind-rotation MAC: (B,2,J,F) x (2,J,K,F) -> (B,2,K,F)."""
+    return external_product.external_product_mac(
+        dig, bsk, block_f=block_f, interpret=INTERPRET
+    )
+
+
+def lpu_keyswitch_mac(digits: jax.Array, ksk_u64: jax.Array,
+                      *, block_s: int = 1024) -> jax.Array:
+    """digits (B,S) int32 x ksk (S,T) uint64 -> (B,T) uint64 (mod 2^64)."""
+    hi, lo = ref.split_u64(ksk_u64)
+    ohi, olo = keyswitch.keyswitch_mac(
+        digits, hi, lo, block_s=block_s, interpret=INTERPRET
+    )
+    return ref.merge_u64(ohi, olo)

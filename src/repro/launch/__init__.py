@@ -1,0 +1,1 @@
+"""Production launch layer: meshes, sharding rules, dry-run, drivers."""

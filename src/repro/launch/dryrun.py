@@ -1,0 +1,110 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input-shape × mesh) cell and extract roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+
+The first two lines above MUST precede any jax import: jax locks the
+device count at first init, and the production meshes need 512 host
+placeholder devices.  Smoke tests and benches never import this module.
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, applicable_shapes, get  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.launch import steps  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True, loss_chunk: int = 512) -> dict:
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+    lowered = steps.lower_cell(cfg, shape, mesh, loss_chunk=loss_chunk)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    mem = compiled.memory_analysis()
+    roof = rl.from_compiled(compiled, chips, rl.model_flops(cfg, shape))
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "lower_s": round(t1 - t0, 1), "compile_s": round(t2 - t1, 1),
+        "bytes_per_device": int(getattr(mem, "argument_size_in_bytes", 0)
+                                + getattr(mem, "output_size_in_bytes", 0)
+                                + getattr(mem, "temp_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "arg_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        **roof.to_dict(),
+    }
+    if verbose:
+        print(f"[{arch} × {shape_name} × {rec['mesh']}] "
+              f"compile={rec['compile_s']}s "
+              f"args/dev={rec['arg_bytes']/2**30:.2f}GiB "
+              f"temp/dev={rec['temp_bytes']/2**30:.2f}GiB "
+              f"Tc={roof.t_compute:.3e}s Tm={roof.t_memory:.3e}s "
+              f"(maj {roof.t_memory_major:.3e}) "
+              f"Tcoll={roof.t_collective:.3e}s -> {roof.bottleneck} "
+              f"(mfu<= {roof.mfu_bound:.2f}..{roof.mfu_bound_major:.2f}, "
+              f"useful={roof.flops_ratio:.2f})", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--loss-chunk", type=int, default=512)
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in applicable_shapes(get(arch)):
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results, failures = [], []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                results.append(run_cell(arch, shape, multi_pod=mp,
+                                        loss_chunk=args.loss_chunk))
+            except Exception as e:  # a failure here is a bug in the system
+                traceback.print_exc()
+                failures.append({"arch": arch, "shape": shape,
+                                 "multi_pod": mp, "error": repr(e)})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"results": results, "failures": failures}, f, indent=1)
+    print(f"\n{len(results)} cells OK, {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

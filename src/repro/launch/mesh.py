@@ -1,0 +1,219 @@
+"""Production meshes + sharding rules for the assigned-architecture pool.
+
+Mesh axes:
+    single-pod:  (data=16, model=16)            = 256 chips (one v5e pod)
+    multi-pod :  (pod=2, data=16, model=16)     = 512 chips
+
+Sharding strategy (FSDP × TP hybrid, ZeRO-style):
+  * 2-D weights shard BOTH axes: the reduction/input axis over "data"
+    (fully-sharded-data-parallel: optimizer state and master weights come
+    down 256×) and the output/head/ff axis over "model" (tensor
+    parallelism: activations stay sharded through the matmul).
+  * the batch axis of activations shards over ("pod", "data"),
+  * vocab shards over "model" for the embedding table and LM head,
+  * MoE expert tensors shard (experts: none, d: data, ff: model) so any
+    expert count (60, 64) works without padding,
+  * small vectors (norms, gates, SSD decay constants) replicate.
+
+`make_production_mesh` is a FUNCTION so importing this module never
+touches jax device state (the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any import).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests / CPU)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# --------------------------------------------------------------------------
+# parameter sharding rules
+# --------------------------------------------------------------------------
+
+_RULES_2D = {
+    # name-suffix -> (axis0, axis1)
+    "embed": ("model", "data"),          # (V, d)
+    "lm_head": ("data", "model"),        # (d, V)
+    "frontend_proj": ("data", None),
+    "wq": ("data", "model"),
+    "wk": ("data", "model"),
+    "wv": ("data", "model"),
+    "wo": ("model", "data"),
+    "w_in": ("data", "model"),
+    "w_gate": ("data", "model"),
+    "w_out": ("model", "data"),
+    "in_proj": ("data", "model"),
+    "out_proj": ("model", "data"),
+    "gate_a": ("data", "model"),
+    "gate_x": ("data", "model"),
+    "router": ("data", None),
+    "conv_w": (None, "model"),
+}
+
+_RULES_3D = {
+    # MoE expert stacks: (E, d, ff) / (E, ff, d)
+    "w_in": (None, "data", "model"),
+    "w_gate": (None, "data", "model"),
+    "w_out": (None, "model", "data"),
+}
+
+
+def _spec_for(path, leaf) -> P:
+    names = [p.key for p in path if hasattr(p, "key")]
+    name = names[-1] if names else ""
+    nd = leaf.ndim
+    if nd <= 1:
+        return P()
+    if nd == 2 and name in _RULES_2D:
+        return P(*_RULES_2D[name])
+    if nd == 3 and name in _RULES_3D and "moe" in names:
+        return P(*_RULES_3D[name])
+    # stacked-over-blocks variants: leading scan axis, shift rules right
+    if nd == 3 and name in _RULES_2D:
+        return P(None, *_RULES_2D[name])
+    if nd == 4 and name in _RULES_3D and "moe" in names:
+        return P(None, *_RULES_3D[name])
+    if nd == 3 and name == "conv_w":
+        return P(None, None, "model")
+    if nd == 2:  # stacked 1-D (norms etc.)
+        return P(None, None)
+    return P(*([None] * nd))
+
+
+def param_specs(params, mesh: Optional[Mesh] = None,
+                mode: str = "train") -> dict:
+    """Pytree of PartitionSpec matching `params` (works for stacked blocks:
+    the leading scan axis is never sharded).  With `mesh`, axes whose
+    dimension is not divisible by the mesh-axis size fall back to
+    replicated (e.g. mamba2's in_proj out-dim 3352 on model=16).
+
+    mode="serve" drops the FSDP ('data') axis: weights replicate across
+    the data ranks and stay HBM-resident, killing the per-token
+    all-gather that dominates the decode collective term (§Perf A)."""
+    specs = jax.tree_util.tree_map_with_path(_spec_for, params)
+    if mode == "serve":
+        def unfsdp(spec):
+            return P(*[None if ax == "data" else ax for ax in spec])
+        specs = jax.tree.map(unfsdp, specs)
+    if mesh is None:
+        return specs
+
+    def fit(leaf, spec):
+        dims = []
+        for i, ax in enumerate(spec):
+            if ax is None:
+                dims.append(None)
+                continue
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= mesh.shape[a]
+            dims.append(ax if leaf.shape[i] % size == 0 else None)
+        return P(*dims)
+    return jax.tree.map(fit, params, specs)
+
+
+def param_shardings(mesh: Mesh, params, mode: str = "train"):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh, mode))
+
+
+def cache_specs(cache, mesh: Mesh, global_batch: int) -> dict:
+    """Decode-cache shardings: batch over dp axes (if divisible), kv-heads /
+    channels over model where the layout allows."""
+    dp = batch_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    bax = dp if global_batch % dp_size == 0 else None
+
+    def spec(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        nd = leaf.ndim
+        stacked = "blocks" in names   # leading scan axis
+        off = 1 if stacked else 0
+        if name == "index":
+            return P(*([None] * nd))
+        body = [None] * (nd - off)
+        if body:
+            body[0] = bax            # batch axis first in every cache leaf
+        if name in ("k", "v") and nd - off == 4:
+            if leaf.shape[-2] % mesh.shape["model"] == 0:
+                body[2] = "model"          # kv-head sharding
+            elif leaf.shape[-1] % mesh.shape["model"] == 0:
+                body[3] = "model"          # GQA G < TP: shard head_dim
+                                           # (§Perf A: avoids replicating
+                                           # the cache TP-fold times)
+        if name in ("conv", "h", "H") and nd - off >= 2:
+            # channel/head axis over model when divisible
+            ch = leaf.shape[-1] if name != "H" else leaf.shape[off + 1]
+            pos = (nd - off - 1) if name != "H" else 1
+            if ch % mesh.shape["model"] == 0:
+                body[pos] = "model"
+        return P(*([None] * off), *body)
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Optional[Mesh] = None):
+    """ShapeDtypeStructs for every model input of this (arch, shape) cell.
+
+    train/prefill: {"tokens","labels"[, "frontend"]} of (B, S);
+    decode: {"tokens": (B,1), "pos": (B,1)} + the KV/state cache comes from
+    `Model.init_cache` ShapeDtypeStructs (built by the caller via eval_shape).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dp = batch_axes(mesh) if mesh is not None else None
+
+    def sharded(st, spec):
+        if mesh is None:
+            return st
+        return jax.ShapeDtypeStruct(st.shape, st.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    bspec = dp if (mesh is not None and B % _dp_size(mesh) == 0) else None
+    if shape.kind in ("train", "prefill"):
+        out = {
+            "tokens": sharded(jax.ShapeDtypeStruct((B, S), jnp.int32), P(bspec)),
+            "labels": sharded(jax.ShapeDtypeStruct((B, S), jnp.int32), P(bspec)),
+        }
+        if cfg.frontend != "none":
+            out["frontend"] = sharded(
+                jax.ShapeDtypeStruct((B, cfg.frontend_len, cfg.frontend_dim),
+                                     jnp.float32), P(bspec, None, None))
+        return out
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "tokens": sharded(jax.ShapeDtypeStruct((B, 1), jnp.int32), P(bspec)),
+        "pos": sharded(jax.ShapeDtypeStruct((B, 1), jnp.int32), P(bspec)),
+    }
+
+
+def _dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n

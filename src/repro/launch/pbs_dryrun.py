@@ -1,0 +1,94 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Roofline the FHE engine itself on the production mesh (§Perf D).
+
+Lowers the batched PBS (paper-faithful: round-robin BSK reuse == batch
+dimension, keys replicated via the NoC analogue) and the XPU-style
+per-ciphertext loop on the 16x16 mesh, and derives the roofline terms of
+each from the compiled HLO.  This is the paper's Fig. 7 comparison as a
+lowered-IR measurement:
+
+    PYTHONPATH=src python -m repro.launch.pbs_dryrun [--params gpt2]
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import batch as batch_mod  # noqa: E402
+from repro.core.params import PAPER_PARAMS, TEST_PARAMS_4BIT  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+U64 = jnp.uint64
+
+
+def pbs_flops(params, B):
+    """Useful FLOPs of B bootstraps: n iterations x (FFT + MAC + IFFT)."""
+    p = params
+    M = p.N // 2
+    j = (p.k + 1) * p.pbs_level
+    fft = (j + (p.k + 1)) * 5 * M * (M.bit_length() - 1)   # 5 N log N
+    mac = 8 * j * (p.k + 1) * M                            # complex MAC
+    return float(B * p.n * (fft + mac))
+
+
+def lower_variant(params, B, mesh, *, batched: bool):
+    data = NamedSharding(mesh, P("data"))
+    repl = NamedSharding(mesh, P())
+    sd = jax.ShapeDtypeStruct
+    cts = sd((B, params.big_n + 1), U64, sharding=data)
+    polys = sd((B, params.N), U64, sharding=data)
+    bsk = sd((params.n, params.k + 1, params.pbs_level, params.k + 1,
+              params.N // 2), jnp.complex128, sharding=repl)
+    ksk = sd((params.big_n, params.ks_level, params.n + 1), U64,
+             sharding=repl)
+    fn = batch_mod.pbs_batch if batched else batch_mod.pbs_unbatched_loop
+    with mesh:
+        lowered = jax.jit(fn, static_argnames=("params",)).lower(
+            cts, polys, bsk, ksk, params=params)
+        return lowered.compile()
+
+
+def run(params_name: str, B: int = 192):
+    params = (PAPER_PARAMS[params_name] if params_name in PAPER_PARAMS
+              else TEST_PARAMS_4BIT)
+    mesh = make_production_mesh()
+    rows = []
+    for batched in (True, False):
+        compiled = lower_variant(params, B, mesh, batched=batched)
+        roof = rl.from_compiled(compiled, mesh.size, pbs_flops(params, B))
+        rows.append({
+            "variant": "taurus-batched" if batched else "xpu-per-ct",
+            "params": params.name, "B": B, **roof.to_dict(),
+            "per_pbs_bound_ms": roof.t_bound / B * mesh.size / 4 * 1e3,
+        })
+        print(f"[{rows[-1]['variant']:14s}] Tc={roof.t_compute:.3e}s "
+              f"Tm={roof.t_memory:.3e}s Tcoll={roof.t_collective:.3e}s "
+              f"-> {roof.bottleneck} useful={roof.flops_ratio:.2f}",
+              flush=True)
+    if rows[0]["t_memory_s"] > 0:
+        gain = rows[1]["t_memory_s"] / rows[0]["t_memory_s"]
+        print(f"BSK-reuse memory-term gain (batched vs per-ct): {gain:.1f}x")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--params", default="cnn20")
+    ap.add_argument("--batch", type=int, default=192)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = run(args.params, args.batch)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

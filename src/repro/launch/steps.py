@@ -1,0 +1,137 @@
+"""jit-able train/serve step factories with explicit shardings.
+
+These are the functions the multi-pod dry-run lowers and compiles, and the
+ones `train.py` / `serve.py` execute.  Grad reduction over the data axes,
+optimizer-state sharding, and activation layout all come from GSPMD given
+the in/out shardings built from `repro.launch.mesh` rules.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.launch import mesh as mesh_lib
+from repro.models import build
+from repro.optim import AdamW
+
+F32 = jnp.float32
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamW, *, loss_chunk: int = 512,
+                    compress=None):
+    """Returns train_step(params, opt_state, batch, step) -> (params,
+    opt_state, metrics).  `compress` optionally wraps gradients (int8
+    gradient compression with error feedback — see repro.runtime.compress)."""
+    model = build(cfg)
+
+    def train_step(params, opt_state, batch, step):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch, loss_chunk=loss_chunk))(params)
+        if compress is not None:
+            grads, opt_state = compress(grads, opt_state)
+        params, opt_state, metrics = opt.update(params, opt_state, grads, step)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, loss_chunk: int = 512):
+    """Forward-only scoring step (the inference-prefill shape cells)."""
+    model = build(cfg)
+
+    def prefill_step(params, batch):
+        h, _ = model.forward(params, batch["tokens"], batch.get("frontend"),
+                             remat=False)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        # last-position logits only (prefill hands off to decode)
+        logits = h[:, -1].astype(F32) @ head.astype(F32)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """One-token decode step against a deep KV/state cache."""
+    model = build(cfg)
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# sharded jit wrappers (what dryrun lowers)
+# --------------------------------------------------------------------------
+
+def shaped_params(cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                  mode: str = "train"):
+    """ShapeDtypeStructs of the param pytree (optionally with shardings)."""
+    model = build(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    if mesh is None:
+        return shapes
+    shard = mesh_lib.param_shardings(mesh, shapes, mode)
+    return jax.tree.map(
+        lambda st, sh: jax.ShapeDtypeStruct(st.shape, st.dtype, sharding=sh),
+        shapes, shard)
+
+
+def shaped_opt_state(cfg: ArchConfig, opt: AdamW, mesh: Optional[Mesh] = None):
+    p = shaped_params(cfg, mesh)
+    st = jax.eval_shape(lambda q: opt.init(q), p)
+    if mesh is None:
+        return st
+    shard = jax.tree.map(
+        lambda s: s.sharding,
+        {"m": p, "v": p})
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        st, shard)
+
+
+def shaped_cache(cfg: ArchConfig, shape: ShapeSpec, mesh: Optional[Mesh] = None):
+    model = build(cfg)
+    cache = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    if mesh is None:
+        return cache
+    specs = mesh_lib.cache_specs(cache, mesh, shape.global_batch)
+    return jax.tree.map(
+        lambda st, sp: jax.ShapeDtypeStruct(st.shape, st.dtype,
+                                            sharding=NamedSharding(mesh, sp)),
+        cache, specs)
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh, *,
+               loss_chunk: int = 512, donate: bool = True):
+    """Lower the appropriate step for one (arch, shape, mesh) cell.
+
+    Returns the `jax.stages.Lowered` object (call .compile() on it).
+    """
+    opt = AdamW()
+    inputs = mesh_lib.input_specs(cfg, shape, mesh)
+    with mesh:
+        if shape.kind == "train":
+            fn = make_train_step(cfg, opt, loss_chunk=loss_chunk)
+            p = shaped_params(cfg, mesh)
+            st = shaped_opt_state(cfg, opt, mesh)
+            step = jax.ShapeDtypeStruct((), jnp.int32)
+            jfn = jax.jit(fn, donate_argnums=(0, 1) if donate else ())
+            return jfn.lower(p, st, inputs, step)
+        if shape.kind == "prefill":
+            fn = make_prefill_step(cfg, loss_chunk=loss_chunk)
+            p = shaped_params(cfg, mesh, mode="serve")
+            return jax.jit(fn).lower(p, inputs)
+        # decode
+        fn = make_serve_step(cfg)
+        p = shaped_params(cfg, mesh, mode="serve")
+        cache = shaped_cache(cfg, shape, mesh)
+        jfn = jax.jit(fn, donate_argnums=(1,) if donate else ())
+        return jfn.lower(p, cache, inputs["tokens"], inputs["pos"])

@@ -1,0 +1,138 @@
+"""End-to-end fault-tolerant training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --steps 300 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt [--reduced]
+
+Wires together: model zoo -> sharding rules -> AdamW -> synthetic data ->
+checkpoint/restart -> StepRunner (retry + straggler watch) -> optional
+int8 gradient compression.  Works on any mesh (CPU host mesh by default).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import importlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get
+from repro.data import DataConfig, SyntheticLMData
+from repro.launch import mesh as mesh_lib
+from repro.launch.steps import make_train_step
+from repro.models import build
+from repro.optim import AdamW, cosine_schedule
+from repro.runtime import FaultConfig, Int8Compressor, StepRunner
+
+
+def reduced_config(arch: str):
+    mod = importlib.import_module(
+        "repro.configs." + arch.replace("-", "_").replace(".", "_"))
+    return mod.reduced()
+
+
+def train(arch: str, *, steps: int = 100, batch: int = 8, seq: int = 256,
+          ckpt_dir: str | None = None, reduced: bool = True,
+          model_parallel: int = 1, lr: float = 3e-3, log_every: int = 10,
+          compress_grads: bool = False, resume: bool = True,
+          fail_at_step: int | None = None):
+    cfg = reduced_config(arch) if reduced else get(arch)
+    model = build(cfg)
+    mesh = mesh_lib.make_host_mesh(model_parallel)
+    opt = AdamW(lr=cosine_schedule(lr, warmup=steps // 10, total=steps))
+    data = SyntheticLMData(DataConfig(cfg.vocab_size, seq, batch))
+    comp = Int8Compressor() if compress_grads else None
+
+    with mesh:
+        params = model.init(jax.random.PRNGKey(0))
+        shardings = mesh_lib.param_shardings(mesh, params)
+        params = jax.tree.map(jax.device_put, params, shardings)
+        opt_state = opt.init(params)
+        if comp is not None:
+            opt_state["ef"] = comp.init(params)
+
+        compress = None
+        if comp is not None:
+            def compress(grads, state):
+                g, ef = comp.roundtrip(grads, state["ef"])
+                return g, {**state, "ef": ef}
+        raw_step = jax.jit(make_train_step(cfg, opt, loss_chunk=min(seq, 512),
+                                           compress=compress),
+                           donate_argnums=(0, 1))
+
+        ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        start = 0
+        if ckpt is not None and resume and ckpt.latest_step() is not None:
+            (params, opt_state), start = ckpt.restore((params, opt_state))
+            print(f"[train] resumed from step {start}")
+
+        state = {"params": params, "opt": opt_state}
+        inject = {"step": fail_at_step}
+
+        def one_step(step_i):
+            batch_i = data.batch(step_i)
+            if inject["step"] is not None and step_i == inject["step"]:
+                raise RuntimeError("injected failure (fault-tolerance test)")
+            p, o, metrics = raw_step(state["params"], state["opt"], batch_i,
+                                     jnp.asarray(step_i, jnp.int32))
+            state["params"], state["opt"] = p, o
+            return p, o, metrics
+
+        runner = StepRunner(one_step, FaultConfig())
+        losses = []
+        t0 = time.time()
+        step_i = start
+        while step_i < steps:
+            try:
+                out = runner.run(step_i)
+            except Exception as e:
+                if ckpt is None or ckpt.latest_step() is None:
+                    raise
+                print(f"[train] step {step_i} failed ({e}); restoring")
+                (state["params"], state["opt"]), step_i = ckpt.restore(
+                    (state["params"], state["opt"]))
+                inject["step"] = None      # the failed node was replaced
+                continue
+            if out is not None:
+                metrics = out[-1]
+                losses.append(float(metrics["loss"]))
+                if step_i % log_every == 0:
+                    print(f"[train] step {step_i} loss={losses[-1]:.4f} "
+                          f"gnorm={float(metrics['grad_norm']):.3f}",
+                          flush=True)
+            if ckpt is not None and (step_i + 1) % FaultConfig().checkpoint_every == 0:
+                ckpt.save(step_i + 1, (state["params"], state["opt"]))
+            step_i += 1
+        if ckpt is not None:
+            ckpt.save(steps, (state["params"], state["opt"]))
+        dt = time.time() - t0
+        print(f"[train] {steps - start} steps in {dt:.1f}s "
+              f"({(steps - start) / max(dt, 1e-9):.2f} it/s); "
+              f"loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
+              f"runner stats {runner.stats}")
+        return losses, runner.stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full published config (default: reduced)")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+    train(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+          ckpt_dir=args.ckpt_dir, reduced=not args.full,
+          model_parallel=args.model_parallel, lr=args.lr,
+          compress_grads=args.compress_grads)
+
+
+if __name__ == "__main__":
+    main()

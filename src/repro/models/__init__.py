@@ -1,0 +1,7 @@
+"""Plaintext LM model zoo (assigned architectures) — pure JAX, dtype-explicit.
+
+This package never imports `repro.core` (which enables x64); it is the
+substrate the multi-pod dry-run and roofline deliverables exercise, and
+the source of quantized blocks for `repro.fhe_ml`.
+"""
+from repro.models.model import Model, build  # noqa: F401

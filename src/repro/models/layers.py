@@ -1,0 +1,364 @@
+"""Shared transformer layers: norms, RoPE, streaming attention, MLP, MoE."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import sharding as sh
+
+F32 = jnp.float32
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float,
+             plus_one: bool = False) -> jax.Array:
+    """RMSNorm: f32 statistics, bf16 elementwise (§Perf C iter 3).
+
+    Only the variance reduction runs in f32; the normalize/scale
+    multiplies stay in the residual dtype, halving the per-layer
+    elementwise HBM streams the backward pass drags around."""
+    dt = x.dtype
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(dt)
+    w = scale.astype(F32)
+    if plus_one:
+        w = w + 1.0
+    return x * inv * w.astype(dt)
+
+
+def rope(q: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding on (..., S, H, hd); pos (..., S) int32."""
+    hd = q.shape[-1]
+    half = hd // 2
+    freqs = (theta ** (-jnp.arange(0, half, dtype=F32) / half))
+    ang = pos.astype(F32)[..., None] * freqs          # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    q1, q2 = q[..., :half].astype(F32), q[..., half:].astype(F32)
+    out = jnp.concatenate([q1 * cos - q2 * sin, q2 * cos + q1 * sin], axis=-1)
+    return out.astype(q.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_pos: jax.Array, kv_pos: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    kv_chunk: int = 1024, softmax_scale: Optional[float] = None
+                    ) -> jax.Array:
+    """Streaming (flash-style) attention with GQA and optional local window.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, G, hd), H % G == 0.
+    q_pos: (B, Sq) absolute positions; kv_pos: (B, Skv).
+    Scans kv chunks with running max/denominator — O(Sq * chunk) memory.
+
+    Tensor parallelism: KV are repeated to H heads BEFORE the score einsum
+    so the head axis shards cleanly over the 'model' mesh axis even when
+    G < mesh_model (the (G, rep) split would otherwise force GSPMD to
+    replicate all heads — a ~TP× flops blowup).  The KV cache still stores
+    only G heads; the repeat happens on the fly per chunk.
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, G, _ = k.shape
+    rep = H // G
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+
+    if Sq == 1:
+        # DECODE fast path (§Perf A): one-shot grouped attention, no KV
+        # repeat, no chunk scan.  With the cache head_dim-sharded over
+        # 'model' (GQA G < TP), the score einsum contracts the sharded hd
+        # axis — GSPMD inserts ONE small (B,G,rep,S) all-reduce per layer
+        # instead of all-gathering the whole KV cache chunk by chunk.
+        qg = (q.astype(F32) * scale).astype(k.dtype).reshape(B, 1, G, rep, hd)
+        mesh = sh.current_mesh()
+        if (mesh is not None and "model" in mesh.axis_names and rep > 1
+                and G % mesh.shape["model"] != 0
+                and hd % mesh.shape["model"] == 0):
+            # cache is head_dim-sharded (launch.mesh.cache_specs): shard q
+            # the same way so GSPMD contracts locally and all-reduces the
+            # small score tensor instead of all-gathering the KV cache.
+            qg = sh.constrain(qg, "batch", None, None, None, "model")
+        s = jnp.einsum("bqgrh,bsgh->bgrqs", qg, k,
+                       preferred_element_type=F32)
+        s = sh.constrain(s, "batch", None, None, None, None)
+        mask = q_pos[:, :, None] >= kv_pos[:, None, :]      # (B,1,S)
+        if window:
+            mask &= q_pos[:, :, None] - kv_pos[:, None, :] < window
+        s = jnp.where(mask[:, None, None, :, :], s, -jnp.inf)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - jnp.where(jnp.isfinite(m), m, 0.0))
+        p = jnp.where(mask[:, None, None, :, :], p, 0.0)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bgrqs,bsgh->bqgrh", (p / jnp.maximum(l, 1e-30)
+                                             ).astype(k.dtype), v,
+                       preferred_element_type=F32)
+        return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+    nk = max(1, Skv // kv_chunk)
+    ck = Skv // nk
+    assert Skv % nk == 0
+    kc = k.reshape(B, nk, ck, G, hd)
+    vc = v.reshape(B, nk, ck, G, hd)
+    pc = kv_pos.reshape(B, nk, ck)
+
+    # q scaled in f32 then cast to the KV dtype: einsums run in bf16 with
+    # f32 accumulation (§Perf C — halves attention HBM traffic vs f32).
+    qf = (q.astype(F32) * scale).astype(k.dtype)
+    qf = sh.constrain(qf, "batch", None, "model", None)
+
+    @jax.checkpoint  # §Perf C: recompute chunk scores/probs in bwd — the
+    # (nk, B, H, Sq, ck) f32 probability stacks never materialize
+    def step(carry, inp):
+        m, l, o = carry
+        kj, vj, pj = inp                                   # (B,ck,G,hd), ·, (B,ck)
+        if rep > 1:
+            kj = jnp.repeat(kj, rep, axis=2)               # (B,ck,H,hd)
+            vj = jnp.repeat(vj, rep, axis=2)
+        kj = sh.constrain(kj, "batch", None, "model", None)
+        vj = sh.constrain(vj, "batch", None, "model", None)
+        s = jnp.einsum("bshd,bchd->bhsc", qf, kj,
+                       preferred_element_type=F32)
+        mask = jnp.ones((B, Sq, ck), dtype=bool)
+        if causal:
+            mask &= q_pos[:, :, None] >= pj[:, None, :]
+        if window:
+            mask &= q_pos[:, :, None] - pj[:, None, :] < window
+        s = jnp.where(mask[:, None, :, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard rows with no valid key yet
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[:, None, :, :], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * corr + jnp.sum(p, axis=-1)
+        o = o * corr[..., None] + jnp.einsum(
+            "bhsc,bchd->bhsd", p.astype(k.dtype), vj,
+            preferred_element_type=F32)
+        return (m_new, l, o), None
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, dtype=F32)
+    l0 = jnp.zeros((B, H, Sq), dtype=F32)
+    o0 = jnp.zeros((B, H, Sq, hd), dtype=F32)
+    (m, l, o), _ = jax.lax.scan(
+        step, (m0, l0, o0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.moveaxis(pc, 1, 0)),
+    )
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    o = jnp.moveaxis(o, 1, 2)                              # (B,Sq,H,hd)
+    return o.astype(q.dtype)
+
+
+# --- parameter helpers --------------------------------------------------------
+
+def dense_init(key, shape, dtype, in_axis: int = 0):
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, F32) * std).astype(dtype)
+
+
+@dataclasses.dataclass
+class AttnParams:
+    @staticmethod
+    def init(key, cfg: ArchConfig, dtype):
+        d, H, G, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        ks = jax.random.split(key, 6)
+        p = {
+            "wq": dense_init(ks[0], (d, H * hd), dtype),
+            "wk": dense_init(ks[1], (d, G * hd), dtype),
+            "wv": dense_init(ks[2], (d, G * hd), dtype),
+            "wo": dense_init(ks[3], (H * hd, d), dtype),
+        }
+        if cfg.qk_norm:
+            p["q_norm"] = jnp.ones((hd,), dtype)
+            p["k_norm"] = jnp.ones((hd,), dtype)
+        return p
+
+
+def attention_block(p, x, pos, cfg: ArchConfig, *, cache=None, window=0):
+    """Self-attention sub-layer.
+
+    cache: None (train/prefill, causal over own seq) or dict with
+    {"k","v": (B, S_cache, G, hd), "pos": (B, S_cache), "index": scalar} —
+    decode: x is (B, 1, d), cache is updated functionally and returned.
+    """
+    B, Sq, d = x.shape
+    H, G, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, Sq, H, hd)
+    k = (x @ p["wk"]).reshape(B, Sq, G, hd)
+    v = (x @ p["wv"]).reshape(B, Sq, G, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+
+    if cache is None:
+        o = flash_attention(q, k, v, pos, pos, causal=True, window=window)
+        new_cache = None
+    else:
+        idx = cache["index"]
+        ck, cv, cpos = cache["k"], cache["v"], cache["pos"]
+        S_cache = ck.shape[1]
+        slot = (idx % S_cache if window else idx)  # ring buffer for local
+        slot = slot.astype(jnp.int32)
+        zero = jnp.zeros((), jnp.int32)            # uniform index dtype:
+        # x64 mode (enabled process-wide by repro.core) would otherwise mix
+        # int64 literals with the int32 cache index
+        ck = jax.lax.dynamic_update_slice(ck, k, (zero, slot, zero, zero))
+        cv = jax.lax.dynamic_update_slice(cv, v, (zero, slot, zero, zero))
+        cpos = jax.lax.dynamic_update_slice(cpos, pos, (zero, slot))
+        # mask out unwritten slots via pos sentinel handled by caller init=-1
+        o = flash_attention(q, ck, cv, pos, cpos, causal=True, window=window)
+        new_cache = {"k": ck, "v": cv, "pos": cpos, "index": idx + Sq}
+    out = o.reshape(B, Sq, H * hd) @ p["wo"]
+    return out, new_cache
+
+
+@dataclasses.dataclass
+class MlpParams:
+    @staticmethod
+    def init(key, cfg: ArchConfig, dtype, d_ff=None):
+        d = cfg.d_model
+        ff = d_ff or cfg.d_ff
+        ks = jax.random.split(key, 3)
+        p = {
+            "w_in": dense_init(ks[0], (d, ff), dtype),
+            "w_out": dense_init(ks[1], (ff, d), dtype),
+        }
+        if cfg.gated_mlp:
+            p["w_gate"] = dense_init(ks[2], (d, ff), dtype)
+        return p
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True)}[name]
+
+
+def mlp_block(p, x, cfg: ArchConfig):
+    h = sh.constrain(x @ p["w_in"], "batch", None, "model")
+    if cfg.gated_mlp:
+        h = _act(cfg.act)(sh.constrain(x @ p["w_gate"], "batch", None, "model")) * h
+    else:
+        h = _act(cfg.act)(h)
+    return sh.constrain(h @ p["w_out"], "batch", None, None)
+
+
+# --- Mixture of Experts -------------------------------------------------------
+
+@dataclasses.dataclass
+class MoeParams:
+    @staticmethod
+    def init(key, cfg: ArchConfig, dtype):
+        d, E, ff = cfg.d_model, cfg.moe_num_experts, cfg.moe_d_ff
+        ks = jax.random.split(key, 5)
+        p = {
+            "router": dense_init(ks[0], (d, E), F32),  # router kept in f32
+            "w_in": dense_init(ks[1], (E, d, ff), dtype, in_axis=1),
+            "w_gate": dense_init(ks[2], (E, d, ff), dtype, in_axis=1),
+            "w_out": dense_init(ks[3], (E, ff, d), dtype, in_axis=1),
+        }
+        if cfg.moe_num_shared:
+            sh_ff = ff * cfg.moe_num_shared
+            kss = jax.random.split(ks[4], 3)
+            p["shared"] = {
+                "w_in": dense_init(kss[0], (d, sh_ff), dtype),
+                "w_gate": dense_init(kss[1], (d, sh_ff), dtype),
+                "w_out": dense_init(kss[2], (sh_ff, d), dtype),
+            }
+        return p
+
+
+def moe_block(p, x, cfg: ArchConfig, *, capacity_factor: float = 0.0,
+              group_size: int = 2048):
+    """Top-k routed experts + always-on shared experts, GShard-style
+    GROUPED capacity dispatch.
+
+    The classic (T, E, C) one-hot dispatch is quadratic in the token
+    count (C ~ T*K/E): at 1M tokens the dispatch tensor alone would be
+    terabytes.  Grouping tokens into independent dispatch groups of G
+    tokens (GShard/Switch on TPU) bounds every intermediate to
+    (n_groups, G, E, Cg) with Cg ~ G*K/E, and the group axis shards
+    over ('pod','data') with zero cross-group communication before the
+    expert all-to-all that GSPMD inserts around the expert einsum.
+
+    x: (B, S, d).  Returns (out, aux_loss).
+    """
+    B, S, d = x.shape
+    E, K = cfg.moe_num_experts, cfg.moe_top_k
+    capacity_factor = capacity_factor or cfg.moe_capacity_factor
+    T = B * S
+    G = min(group_size, T)
+    nG = T // G
+    assert T % G == 0, (T, G)
+    xt = x.reshape(nG, G, d)
+    xt = sh.constrain(xt, "batch", None, None)
+
+    logits = (xt.astype(F32) @ p["router"])                 # (nG, G, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)                # (nG, G, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    C = int(math.ceil(G * K / E * capacity_factor))
+    C = min(max(C, 4), G)
+    onehot = jax.nn.one_hot(idx, E, dtype=F32)              # (nG, G, K, E)
+    # position of each (token, k) within its expert queue (group-local)
+    flat = onehot.reshape(nG, G * K, E)
+    ranks = (jnp.cumsum(flat, axis=1) - flat).reshape(nG, G, K, E)
+    keep = (ranks < C) * onehot
+    pos = jnp.einsum("gtke,gtke->gtk", ranks, onehot).astype(jnp.int32)
+
+    if cfg.moe_dispatch == "gather":
+        # §Perf B: scatter/gather dispatch — zero matmul FLOPs, O(T*K*d)
+        # bytes.  The einsum path moves T*E*C*d MACs PER EINSUM, which at
+        # 64 experts rivals the expert FFN compute itself (useful-flops
+        # ratio 0.09 on moonshot); segment_sum/take replace it entirely.
+        kept = jnp.einsum("gtke->gtk", keep) > 0            # (nG, G, K)
+        slot = (idx * C + pos).astype(jnp.int32)            # (nG, G, K)
+        slot = jnp.where(kept, slot, E * C)                 # drop bucket
+
+        def disp_group(sl, xg):                             # (G,K), (G,d)
+            upd = jnp.repeat(xg, K, axis=0)                 # (G*K, d)
+            return jax.ops.segment_sum(upd, sl.reshape(-1),
+                                       num_segments=E * C + 1)
+        xe = jax.vmap(disp_group)(slot, xt)[:, :-1]         # (nG, E*C, d)
+        xe = xe.reshape(nG, E, C, d)
+        xe = sh.constrain(xe, "batch", None, None, None)
+        h = sh.constrain(jnp.einsum("gecd,edf->gecf", xe, p["w_in"]),
+                         "batch", None, None, "model")
+        g = _act(cfg.act)(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]))
+        ye = jnp.einsum("gecf,efd->gecd", h * g, p["w_out"])
+        ye_flat = ye.reshape(nG, E * C, d)
+        back = jnp.take_along_axis(
+            ye_flat, jnp.minimum(slot, E * C - 1).reshape(nG, G * K, 1),
+            axis=1).reshape(nG, G, K, d)
+        w = (gate_vals * kept).astype(back.dtype)           # (nG, G, K)
+        out = jnp.einsum("gtk,gtkd->gtd", w, back)
+    else:
+        posoh = jax.nn.one_hot(pos, C, dtype=x.dtype)       # (nG, G, K, C)
+        disp = jnp.einsum("gtke,gtkc->gtec", keep.astype(x.dtype), posoh)
+        comb = jnp.einsum("gtec,gtk,gtke->gtec",
+                          disp.astype(F32), gate_vals, keep).astype(x.dtype)
+
+        xe = jnp.einsum("gtec,gtd->gecd", disp, xt)         # (nG, E, C, d)
+        xe = sh.constrain(xe, "batch", None, None, None)
+        h = sh.constrain(jnp.einsum("gecd,edf->gecf", xe, p["w_in"]),
+                         "batch", None, None, "model")
+        g = _act(cfg.act)(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]))
+        ye = jnp.einsum("gecf,efd->gecd", h * g, p["w_out"])
+        out = jnp.einsum("gtec,gecd->gtd", comb, ye)
+
+    if cfg.moe_num_shared:
+        sp = p["shared"]
+        hs = (xt @ sp["w_in"]) * _act(cfg.act)(xt @ sp["w_gate"])
+        out = out + (hs @ sp["w_out"])
+
+    # load-balance aux loss (Switch-style)
+    density = jnp.mean(onehot.sum(2), axis=(0, 1))          # routed frac / e
+    router_prob = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * router_prob) * E
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,292 @@
+"""Composable LM builder for the assigned architecture pool.
+
+`build(cfg)` returns a `Model` whose methods cover the whole lifecycle:
+
+    init(rng)                         -> params
+    forward(params, tokens, frontend) -> (B, S, d) final hidden
+    loss(params, batch)               -> scalar (chunked CE, no (B,S,V))
+    init_cache(batch, max_len)        -> decode cache pytree
+    decode_step(params, cache, tok, pos) -> (logits, cache)
+
+Layer stacking: layers are grouped into macro-blocks of
+``period = len(cfg.layer_pattern)``; ``L // period`` macro-blocks run under
+one `jax.lax.scan` with stacked params (bounds compile time and HLO size at
+62-layer scale), and the ``L % period`` remainder runs unrolled.  Every
+sub-layer is pre-norm residual; MoE configs replace the dense MLP.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import rglru as R
+from repro.models import sharding as sh
+from repro.models import ssd as S
+
+F32 = jnp.float32
+POS_SENTINEL = 1 << 30  # unwritten KV slots: fails the causal mask
+
+
+def _dtype(cfg: ArchConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# --------------------------------------------------------------------------
+# per-layer params / apply
+# --------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ArchConfig, kind: str, dtype):
+    k_mix, k_mlp = jax.random.split(key)
+    p: dict = {"pre_norm": jnp.ones((cfg.d_model,), dtype),
+               "mlp_norm": jnp.ones((cfg.d_model,), dtype)}
+    if kind in ("attn", "local"):
+        p["mixer"] = L.AttnParams.init(k_mix, cfg, dtype)
+    elif kind == "ssd":
+        p["mixer"] = S.SsdParams.init(k_mix, cfg, dtype)
+    elif kind == "rglru":
+        p["mixer"] = R.RgLruParams.init(k_mix, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if cfg.is_moe:
+        p["moe"] = L.MoeParams.init(k_mlp, cfg, dtype)
+    elif cfg.d_ff > 0:
+        p["mlp"] = L.MlpParams.init(k_mlp, cfg, dtype)
+    else:
+        del p["mlp_norm"]       # mixer-only layer (e.g. mamba2)
+    return p
+
+
+def _apply_layer(p, x, pos, cfg: ArchConfig, kind: str, cache=None):
+    """One (mixer + MLP) residual pair.  Returns (x, aux, new_cache)."""
+    h = L.rms_norm(x, p["pre_norm"], cfg.norm_eps, plus_one=cfg.embed_scale)
+    if kind in ("attn", "local"):
+        window = cfg.local_window if kind == "local" else 0
+        mix, new_cache = L.attention_block(p["mixer"], h, pos, cfg,
+                                           cache=cache, window=window)
+    elif kind == "ssd":
+        mix, new_cache = S.ssd_block(p["mixer"], h, cfg, cache=cache)
+    else:  # rglru
+        mix, new_cache = R.rglru_block(p["mixer"], h, cfg, cache=cache)
+    x = x + mix
+    aux = jnp.zeros((), F32)
+    if cfg.is_moe or cfg.d_ff > 0:
+        h = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps, plus_one=cfg.embed_scale)
+        if cfg.is_moe:
+            y, aux = L.moe_block(p["moe"], h, cfg)
+        else:
+            y = L.mlp_block(p["mlp"], h, cfg)
+        x = x + y
+    return x, aux, new_cache
+
+
+def _init_cache_layer(cfg: ArchConfig, kind: str, batch: int, max_len: int, dtype):
+    if kind in ("attn", "local"):
+        size = min(max_len, cfg.local_window) if kind == "local" else max_len
+        G, hd = cfg.num_kv_heads, cfg.head_dim
+        return {
+            "k": jnp.zeros((batch, size, G, hd), dtype),
+            "v": jnp.zeros((batch, size, G, hd), dtype),
+            "pos": jnp.full((batch, size), POS_SENTINEL, jnp.int32),
+            "index": jnp.zeros((), jnp.int32),
+        }
+    if kind == "ssd":
+        return S.ssd_init_cache(cfg, batch, dtype)
+    return R.rglru_init_cache(cfg, batch, dtype)
+
+
+# --------------------------------------------------------------------------
+# model
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ---- init -------------------------------------------------------------
+    def init(self, rng: jax.Array):
+        cfg = self.cfg
+        dtype = _dtype(cfg)
+        period = len(cfg.layer_pattern)
+        n_scan = cfg.num_layers // period
+        n_tail = cfg.num_layers % period
+        k_emb, k_blocks, k_tail, k_head, k_fe = jax.random.split(rng, 5)
+
+        params: dict = {
+            "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model), F32)
+                      * 0.02).astype(dtype),
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (jax.random.normal(
+                k_head, (cfg.d_model, cfg.vocab_size), F32)
+                / jnp.sqrt(cfg.d_model)).astype(dtype)
+        if cfg.frontend != "none":
+            params["frontend_proj"] = L.dense_init(
+                k_fe, (cfg.frontend_dim, cfg.d_model), dtype)
+
+        def init_block(key):
+            ks = jax.random.split(key, period)
+            return {f"l{i}": _init_layer(ks[i], cfg, cfg.layer_pattern[i], dtype)
+                    for i in range(period)}
+
+        params["blocks"] = jax.vmap(init_block)(jax.random.split(k_blocks, n_scan))
+        if n_tail:
+            ks = jax.random.split(k_tail, n_tail)
+            params["tail"] = [
+                _init_layer(ks[i], cfg, cfg.layer_pattern[i % period], dtype)
+                for i in range(n_tail)]
+        return params
+
+    # ---- embedding / unembedding -------------------------------------------
+    def _embed(self, params, tokens, frontend=None):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = sh.constrain(x, "batch", None, None)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+        if frontend is not None and cfg.frontend != "none":
+            fe = frontend @ params["frontend_proj"]
+            x = jax.lax.dynamic_update_slice(x, fe.astype(x.dtype), (0, 0, 0))
+        return x
+
+    def _head(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    # ---- forward -----------------------------------------------------------
+    def forward(self, params, tokens, frontend=None, *, remat: bool = True,
+                remat_policy: str = "full"):
+        """tokens (B, S) -> final hidden (B, S, d), plus MoE aux loss.
+
+        remat_policy: "full" recomputes everything in bwd (min memory);
+        "dots" saves matmul outputs so the backward pass skips re-running
+        projections and their collectives.  §Perf C measured: "dots" cut
+        Tc -16% / Tcoll -12% but grew the DOMINANT memory term +35%
+        (79 GiB temp) — hypothesis refuted for the memory-bound regime,
+        so "full" stays the default; "dots" remains available for
+        compute-bound deployments.
+        """
+        cfg = self.cfg
+        B, Sq = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+        x = self._embed(params, tokens, frontend)
+        period = len(cfg.layer_pattern)
+
+        def block_fn(x, bp):
+            aux = jnp.zeros((), F32)
+            for i in range(period):
+                x, a, _ = _apply_layer(bp[f"l{i}"], x, pos, cfg,
+                                       cfg.layer_pattern[i])
+                aux = aux + a
+            return x, aux
+        if remat:
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if remat_policy == "dots" else None)
+            block_fn = jax.checkpoint(block_fn, policy=policy)
+
+        def scan_step(x, bp):
+            return block_fn(x, bp)
+        x, auxs = jax.lax.scan(scan_step, x, params["blocks"])
+        aux = jnp.sum(auxs)
+        for i, lp in enumerate(params.get("tail", [])):
+            x, a, _ = _apply_layer(lp, x, pos, cfg,
+                                   cfg.layer_pattern[i % period])
+            aux = aux + a
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps,
+                       plus_one=cfg.embed_scale)
+        return x, aux
+
+    # ---- loss (chunked CE over the vocab-sharded head) ----------------------
+    def loss(self, params, batch, *, loss_chunk: int = 512,
+             aux_weight: float = 0.01):
+        """batch: {"tokens": (B,S) int32, "labels": (B,S) int32,
+        optional "frontend"}.  Never materializes (B, S, V)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        h, aux = self.forward(params, tokens, batch.get("frontend"))
+        head = self._head(params)
+        B, Sq, d = h.shape
+        C = min(loss_chunk, Sq)
+        nc = Sq // C
+        assert Sq % nc == 0
+        hc = h.reshape(B, nc, C, d).swapaxes(0, 1)          # (nc, B, C, d)
+        lc = labels.reshape(B, nc, C).swapaxes(0, 1)
+
+        @jax.checkpoint  # recompute chunk logits in bwd: never store (B,C,V)
+        def chunk_loss(args):
+            hx, lx = args
+            # bf16 x bf16 -> f32 accumulation: no f32 copy of the head
+            # table ever materializes (§Perf C)
+            logits = jnp.matmul(hx, head, preferred_element_type=F32)
+            logits = sh.constrain(logits, "batch", None, "model")
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+            return jnp.sum(logz - gold)
+        total = jnp.sum(jax.lax.map(chunk_loss, (hc, lc)))
+        return total / (B * Sq) + aux_weight * aux
+
+    # ---- decode -------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        dtype = _dtype(cfg)
+        period = len(cfg.layer_pattern)
+        n_scan = cfg.num_layers // period
+        n_tail = cfg.num_layers % period
+
+        def one_block(_):
+            return {f"l{i}": _init_cache_layer(cfg, cfg.layer_pattern[i],
+                                               batch, max_len, dtype)
+                    for i in range(period)}
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_scan,) + x.shape), one_block(0))
+        cache = {"blocks": stacked}
+        if n_tail:
+            cache["tail"] = [
+                _init_cache_layer(cfg, cfg.layer_pattern[i % period],
+                                  batch, max_len, dtype)
+                for i in range(n_tail)]
+        return cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """One decode step.  tokens (B, 1) int32; pos (B, 1) int32 absolute.
+
+        Returns (logits (B, V) f32, new_cache).
+        """
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        period = len(cfg.layer_pattern)
+
+        def scan_step(x, inp):
+            bp, bc = inp
+            new_c = {}
+            for i in range(period):
+                x, _, nc = _apply_layer(bp[f"l{i}"], x, pos, cfg,
+                                        cfg.layer_pattern[i],
+                                        cache=bc[f"l{i}"])
+                new_c[f"l{i}"] = nc
+            return x, new_c
+        x, new_blocks = jax.lax.scan(scan_step, x,
+                                     (params["blocks"], cache["blocks"]))
+        new_cache = {"blocks": new_blocks}
+        if "tail" in cache:
+            new_cache["tail"] = []
+            for i, (lp, lc) in enumerate(zip(params["tail"], cache["tail"])):
+                x, _, nc = _apply_layer(lp, x, pos, cfg,
+                                        cfg.layer_pattern[i % period], cache=lc)
+                new_cache["tail"].append(nc)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps,
+                       plus_one=cfg.embed_scale)
+        logits = (x[:, -1].astype(F32) @ self._head(params).astype(F32))
+        return logits, new_cache
+
+
+def build(cfg: ArchConfig) -> Model:
+    return Model(cfg)

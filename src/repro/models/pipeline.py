@@ -1,0 +1,99 @@
+"""GPipe-style pipeline parallelism over the `pod` mesh axis.
+
+For multi-pod deployments where cross-pod ICI is the scarce resource,
+pipelining sends only (B_micro, S, d) activations across the pod link
+once per microbatch instead of all-reducing every gradient across pods.
+
+Implementation: `shard_map` over the `pod` axis; each pod holds
+`num_layers / n_stages` layers (the stage axis is the leading axis of a
+stacked block pytree).  The classic GPipe schedule runs
+`n_micro + n_stages - 1` ticks; activations hop stages via
+`jax.lax.ppermute`.  Losses are computed on the last stage and summed.
+
+This is an OPTIONAL execution mode (train_step_pipelined); the default
+data/tensor-parallel path in `repro.launch.steps` remains primary.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+F32 = jnp.float32
+
+
+def pipeline_apply(stage_fn: Callable, params_stacked, x_micro, *,
+                   axis_name: str = "pod"):
+    """Run microbatches through pipeline stages laid over `axis_name`.
+
+    stage_fn(stage_params, x) -> x           (one stage's layers)
+    params_stacked: pytree with leading stage axis, sharded over pod.
+    x_micro: (n_micro, B_micro, S, d) — all microbatches, replicated.
+
+    Returns (n_micro, B_micro, S, d) outputs as produced by the LAST
+    stage (other stages contribute zeros; caller psums or selects).
+    """
+    n_stages = jax.lax.axis_size(axis_name)
+    stage = jax.lax.axis_index(axis_name)
+    n_micro = x_micro.shape[0]
+    ticks = n_micro + n_stages - 1
+
+    # each pod's slice of the stacked params has a singleton stage axis
+    my_params = jax.tree.map(lambda a: a[0], params_stacked)
+
+    def tick(carry, t):
+        inflight, outputs = carry
+        # stage 0 ingests microbatch t (when valid); others take the
+        # activation forwarded from the previous stage
+        feed = jnp.where(t < n_micro, t, 0)
+        x_in = jnp.where(stage == 0, x_micro[feed], inflight)
+        y = stage_fn(my_params, x_in)
+        # forward to the next stage (ring permute; last->first unused)
+        fwd = jax.lax.ppermute(
+            y, axis_name,
+            perm=[(i, (i + 1) % n_stages) for i in range(n_stages)])
+        # the LAST stage emits microbatch (t - n_stages + 1)
+        out_idx = t - (n_stages - 1)
+        is_out = jnp.logical_and(stage == n_stages - 1, out_idx >= 0)
+        outputs = jax.lax.cond(
+            is_out,
+            lambda o: o.at[jnp.maximum(out_idx, 0)].set(y),
+            lambda o: o, outputs)
+        return (fwd, outputs), None
+
+    out0 = jnp.zeros_like(x_micro)
+    (_, outputs), _ = jax.lax.scan(
+        tick, (jnp.zeros_like(x_micro[0]), out0), jnp.arange(ticks))
+    # broadcast last stage's outputs to every pod member
+    return jax.lax.psum(
+        jnp.where(stage == n_stages - 1, outputs, jnp.zeros_like(outputs)),
+        axis_name)
+
+
+def make_pipelined_fwd(stage_fn: Callable, mesh: Mesh, *, n_micro: int,
+                       axis_name: str = "pod"):
+    """Wrap pipeline_apply in shard_map over the pod axis.
+
+    params_stacked leaves must have leading dim == pod size.
+    x: (B, S, d) global; split into n_micro microbatches internally.
+    """
+    def fwd(params_stacked, x):
+        B = x.shape[0]
+        assert B % n_micro == 0
+        xm = x.reshape(n_micro, B // n_micro, *x.shape[1:])
+
+        inner = functools.partial(pipeline_apply, stage_fn,
+                                  axis_name=axis_name)
+        specs_p = jax.tree.map(lambda _: P(axis_name), params_stacked)
+        y = shard_map(
+            inner, mesh=mesh,
+            in_specs=(specs_p, P()),
+            out_specs=P(),
+            check_rep=False,
+        )(params_stacked, xm)
+        return y.reshape(B, *x.shape[1:])
+    return fwd

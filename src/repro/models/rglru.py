@@ -1,0 +1,119 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The recurrent sub-layer is:  x -> [linear branch (gate), recurrent branch]
+  recurrent branch: temporal conv1d(width 4) -> RG-LRU -> out
+  RG-LRU:  r_t = sigmoid(W_a x_t + b_a)       (recurrence gate)
+           i_t = sigmoid(W_x x_t + b_x)       (input gate)
+           a_t = a^(c * r_t),  a = sigmoid(Lambda)  (per-channel, c=8)
+           h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses an associative scan over (a, b) pairs; decode is the
+one-step recurrence.  Parallelism: the channel axis shards over 'model'.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import sharding as sh
+
+F32 = jnp.float32
+_C = 8.0  # Griffin's recurrence-gate exponent constant
+
+
+@dataclasses.dataclass
+class RgLruParams:
+    @staticmethod
+    def init(key, cfg: ArchConfig, dtype):
+        d = cfg.d_model
+        di = cfg.rglru_width or d
+        ks = jax.random.split(key, 6)
+        std = 1.0 / math.sqrt(d)
+        # Lambda init so a in [0.9, 0.999] (Griffin appendix)
+        u = jax.random.uniform(ks[4], (di,), F32, 0.9 ** 2, 0.999 ** 2)
+        lam = jnp.log(jnp.sqrt(u) / (1 - jnp.sqrt(u)))
+        return {
+            "w_in": (jax.random.normal(ks[0], (d, di), F32) * std).astype(dtype),
+            "w_gate": (jax.random.normal(ks[1], (d, di), F32) * std).astype(dtype),
+            "w_out": (jax.random.normal(ks[2], (di, d), F32) / math.sqrt(di)).astype(dtype),
+            "conv_w": (jax.random.normal(ks[3], (4, di), F32) * 0.2).astype(dtype),
+            "conv_b": jnp.zeros((di,), dtype),
+            "gate_a": (jax.random.normal(ks[5], (di, di), F32) * (1 / math.sqrt(di))).astype(dtype),
+            "gate_x": (jax.random.normal(jax.random.fold_in(ks[5], 1), (di, di), F32)
+                       * (1 / math.sqrt(di))).astype(dtype),
+            "b_a": jnp.zeros((di,), F32),
+            "b_x": jnp.zeros((di,), F32),
+            "Lambda": lam,
+        }
+
+
+def _conv1d(x, w, b, state=None):
+    K = w.shape[0]
+    pad = (jnp.zeros(x.shape[:-2] + (K - 1, x.shape[-1]), x.dtype)
+           if state is None else state)
+    xp = jnp.concatenate([pad, x], axis=-2)
+    out = sum(xp[..., i:i + x.shape[-2], :] * w[i] for i in range(K)) + b
+    return out, xp[..., -(K - 1):, :]
+
+
+def rglru_scan(x, a_log, gate_r, gate_i, h0=None):
+    """x: (B, T, D) f32; a_log = c*r_t*log(a) (B,T,D) negative log-decay.
+
+    Associative scan over h_t = a_t h_{t-1} + b_t.
+    """
+    a = jnp.exp(a_log)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * a_log), 1e-12)) * (gate_i * x)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh
+
+
+def rglru_block(p, x, cfg: ArchConfig, *, cache=None):
+    """Griffin recurrent sub-layer. x: (B, T, d) -> (out, new_cache)."""
+    B, T, d = x.shape
+    gate = jax.nn.gelu(sh.constrain(x @ p["w_gate"], "batch", None, "model"))
+    u = sh.constrain(x @ p["w_in"], "batch", None, "model")
+    conv_state = None if cache is None else cache["conv"]
+    u, new_conv = _conv1d(u, p["conv_w"], p["conv_b"], conv_state)
+
+    uf = u.astype(F32)
+    r = jax.nn.sigmoid(uf @ p["gate_a"].astype(F32) + p["b_a"])
+    i = jax.nn.sigmoid(uf @ p["gate_x"].astype(F32) + p["b_x"])
+    log_a = -_C * r * jax.nn.softplus(p["Lambda"])         # (B,T,D) <= 0
+
+    if cache is None:
+        h = rglru_scan(uf, log_a, r, i)
+        new_cache = None
+    else:
+        def step(hprev, inp):
+            u_t, la_t, i_t = inp
+            a_t = jnp.exp(la_t)
+            h_t = a_t * hprev + jnp.sqrt(jnp.maximum(1 - a_t ** 2, 1e-12)) * (i_t * u_t)
+            return h_t, h_t
+        hT, hs = jax.lax.scan(
+            step, cache["h"],
+            (jnp.moveaxis(uf, 1, 0), jnp.moveaxis(log_a, 1, 0),
+             jnp.moveaxis(i, 1, 0)))
+        h = jnp.moveaxis(hs, 0, 1)
+        new_cache = {"conv": new_conv, "h": hT}
+
+    out = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return out, new_cache
+
+
+def rglru_init_cache(cfg: ArchConfig, batch: int, dtype):
+    di = cfg.rglru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, 3, di), dtype),
+        "h": jnp.zeros((batch, di), F32),
+    }

@@ -1,0 +1,47 @@
+"""Logical sharding constraints usable from inside model code.
+
+`constrain(x, *logical)` applies `with_sharding_constraint` when a mesh
+context is active (train/serve/dry-run under `with mesh:`) and is a no-op
+otherwise (CPU unit tests).  Logical names:
+
+    batch -> ("pod","data") when the mesh has a pod axis, else ("data",)
+    model -> "model"   (TP axis: heads / ff / vocab / channels)
+    None  -> unsharded axis
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def current_mesh():
+    try:
+        from jax.interpreters import pxla
+        m = pxla.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def constrain(x: jax.Array, *logical):
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    names = mesh.axis_names
+    spec = []
+    for ax in logical:
+        if ax == "batch":
+            spec.append(("pod", "data") if "pod" in names else "data")
+        elif ax == "model":
+            spec.append("model" if "model" in names else None)
+        else:
+            spec.append(None)
+    # never shard the batch axis finer than its size (e.g. long_500k B=1)
+    dp = spec[0]
+    if dp is not None and logical and logical[0] == "batch":
+        dp_size = 1
+        for a in (dp if isinstance(dp, tuple) else (dp,)):
+            dp_size *= mesh.shape[a]
+        if x.shape[0] % dp_size != 0:
+            spec[0] = None
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,192 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked scan, pure JAX.
+
+Implements the SSD parameterization of arXiv:2405.21060: per-head scalar
+decay a_t = exp(-softplus(dt) * A), matrix state H in R^{P x S} updated as
+
+    H_t = a_t * H_{t-1} + dt_t * x_t b_t^T
+    y_t = H_t c_t + D * x_t
+
+Training/prefill uses the chunked (block) form: intra-chunk attention-like
+term + inter-chunk recurrence over chunk states, O(T * chunk) memory.
+Decode is the plain one-step recurrence over a carried state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import sharding as sh
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass
+class SsdParams:
+    @staticmethod
+    def init(key, cfg: ArchConfig, dtype):
+        d = cfg.d_model
+        di = cfg.ssm_expand * d          # inner width
+        nh = di // cfg.ssm_head_dim      # heads
+        S = cfg.ssm_state_dim
+        ks = jax.random.split(key, 4)
+        proj_out = 2 * di + 2 * S + nh   # [z, x, B, C, dt]
+        std = 1.0 / math.sqrt(d)
+        p = {
+            "in_proj": (jax.random.normal(ks[0], (d, proj_out), F32) * std).astype(dtype),
+            "out_proj": (jax.random.normal(ks[1], (di, d), F32) / math.sqrt(di)).astype(dtype),
+            # conv over [x, B, C] features, width 4 (mamba2 default)
+            "conv_w": (jax.random.normal(ks[2], (4, di + 2 * S), F32) * 0.2).astype(dtype),
+            "conv_b": jnp.zeros((di + 2 * S,), dtype),
+            "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(F32),
+            "D": jnp.ones((nh,), F32),
+            "dt_bias": jnp.full((nh,), math.log(math.e - 1), F32),  # softplus^-1(1)
+            "norm": jnp.ones((di,), dtype),
+        }
+        return p
+
+
+def _split(pre, di, S, nh):
+    z = pre[..., :di]
+    xBC = pre[..., di:di + di + 2 * S]
+    dt = pre[..., -nh:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, state=None):
+    """Depthwise causal conv width K over (B, T, C); state (B, K-1, C)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xBC.shape[:-2] + (K - 1, xBC.shape[-1]), xBC.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, xBC], axis=-2)             # (B, T+K-1, C)
+    out = sum(xp[..., i:i + xBC.shape[-2], :] * w[i] for i in range(K)) + b
+    new_state = xp[..., -(K - 1):, :]
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, a_log, B, C, D, chunk: int):
+    """Chunked SSD scan.
+
+    x: (Bt, T, nh, P)   dt: (Bt, T, nh)  softplus-ed already
+    B, C: (Bt, T, S)    (single group, broadcast over heads)
+    Returns y: (Bt, T, nh, P).
+    """
+    Bt, T, nh, P = x.shape
+    S = B.shape[-1]
+    nc = T // chunk
+    assert T % chunk == 0
+    A = -jnp.exp(a_log)                                    # (nh,) negative
+    dA = dt * A                                            # (Bt, T, nh) log-decay
+    xr = x.reshape(Bt, nc, chunk, nh, P)
+    dtr = dt.reshape(Bt, nc, chunk, nh)
+    dAr = dA.reshape(Bt, nc, chunk, nh)
+    Br = B.reshape(Bt, nc, chunk, S)
+    Cr = C.reshape(Bt, nc, chunk, S)
+
+    # cumulative log-decay within each chunk (inclusive)
+    seg = jnp.cumsum(dAr, axis=2)                          # (Bt, nc, chunk, nh)
+
+    # 1) intra-chunk (dual "attention" form):
+    #    y_t += sum_{s<=t} exp(seg_t - seg_s) * dt_s * (c_t . b_s) x_s
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]    # (Bt,nc,t,s,nh)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask the EXPONENT, not the product: exp of masked (s>t) entries would
+    # overflow (rel > 0 there) and poison the backward pass with inf*0=NaN.
+    rel = jnp.where(tri[None, None, :, :, None], rel, -jnp.inf)
+    decay = jnp.exp(rel)
+    scores = jnp.einsum("bnti,bnui->bntu", Cr, Br)         # (Bt,nc,t,u)
+    w = scores[..., None] * decay * dtr[:, :, None, :, :]  # (Bt,nc,t,u,nh)
+    y_intra = jnp.einsum("bntuh,bnuhp->bnthp", w, xr)
+
+    # 2) chunk states: G_n = sum_s exp(seg_last - seg_s) dt_s b_s x_s^T
+    last = seg[:, :, -1:, :]                               # (Bt,nc,1,nh)
+    w_in = jnp.exp(last - seg) * dtr                       # (Bt,nc,chunk,nh)
+    G = jnp.einsum("bnsh,bnsi,bnshp->bnhip", w_in, Br, xr)  # (Bt,nc,nh,S,P)
+
+    # 3) inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(last[:, :, 0, :])                # (Bt,nc,nh)
+
+    def step(H, inp):
+        G_n, dec_n = inp                                   # (Bt,nh,S,P), (Bt,nh)
+        H_new = H * dec_n[..., None, None] + G_n
+        return H_new, H                                    # emit PREVIOUS state
+    H0 = jnp.zeros((Bt, nh, S, P), x.dtype)
+    H_last, H_prev = jax.lax.scan(
+        step, H0, (jnp.moveaxis(G, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    H_prev = jnp.moveaxis(H_prev, 0, 1)                    # (Bt,nc,nh,S,P)
+
+    # 4) inter-chunk contribution: y_t += exp(seg_t) * c_t . H_prev
+    y_inter = jnp.einsum("bnth,bnti,bnhip->bnthp",
+                         jnp.exp(seg), Cr, H_prev)
+    y = (y_intra + y_inter).reshape(Bt, T, nh, P)
+    y = y + D[None, None, :, None] * x
+    return y, H_last
+
+
+def ssd_block(p, x, cfg: ArchConfig, *, cache=None):
+    """Mamba-2 mixer sub-layer. x: (B, T, d).
+
+    cache: None (train/prefill) or {"conv": (B,3,C), "H": (B,nh,S,P)} for
+    decode (T small, typically 1); returns (out, new_cache).
+    """
+    Bt, T, d = x.shape
+    di = cfg.ssm_expand * d
+    S = cfg.ssm_state_dim
+    P = cfg.ssm_head_dim
+    nh = di // P
+    pre = sh.constrain(x @ p["in_proj"], "batch", None, "model")
+    z, xBC, dt = _split(pre, di, S, nh)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])
+
+    conv_state = None if cache is None else cache["conv"]
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xs = xBC[..., :di].reshape(Bt, T, nh, P)
+    B = xBC[..., di:di + S].astype(F32)
+    C = xBC[..., di + S:].astype(F32)
+
+    if cache is None:
+        y, H = ssd_chunked(xs.astype(F32), dt, p["A_log"], B, C, p["D"],
+                           min(cfg.ssm_chunk, T))
+        new_cache = None
+    else:
+        # one-step recurrence (decode): T steps sequential (T==1 typical)
+        A = -jnp.exp(p["A_log"])
+
+        def step(H, inp):
+            x_t, dt_t, b_t, c_t = inp
+            dec = jnp.exp(dt_t * A)                        # (Bt,nh)
+            H = H * dec[..., None, None] + jnp.einsum(
+                "bh,bi,bhp->bhip", dt_t, b_t, x_t)
+            y_t = jnp.einsum("bi,bhip->bhp", c_t, H)
+            return H, y_t
+        H, ys = jax.lax.scan(
+            step, cache["H"],
+            (jnp.moveaxis(xs.astype(F32), 1, 0), jnp.moveaxis(dt, 1, 0),
+             jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0)))
+        y = jnp.moveaxis(ys, 0, 1) + p["D"][None, None, :, None] * xs.astype(F32)
+        new_cache = {"conv": new_conv, "H": H}
+
+    y = y.reshape(Bt, T, di).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(F32)), axis=-1, keepdims=True)
+    y = (y.astype(F32) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x.dtype) * p["norm"]
+    out = y @ p["out_proj"]
+    return out, new_cache
+
+
+def ssd_init_cache(cfg: ArchConfig, batch: int, dtype):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    S = cfg.ssm_state_dim
+    P = cfg.ssm_head_dim
+    nh = di // P
+    return {
+        "conv": jnp.zeros((batch, 3, di + 2 * S), dtype),
+        "H": jnp.zeros((batch, nh, S, P), F32),
+    }

@@ -1,0 +1,3 @@
+"""Optimizer substrate (no optax): AdamW + cosine schedule + global clip."""
+from repro.optim.adamw import AdamW, adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedule import cosine_schedule  # noqa: F401

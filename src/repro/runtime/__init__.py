@@ -1,0 +1,5 @@
+"""Distributed runtime: fault tolerance, elasticity, straggler mitigation,
+gradient compression."""
+from repro.runtime.fault import StepRunner, FaultConfig  # noqa: F401
+from repro.runtime.elastic import ElasticMesh  # noqa: F401
+from repro.runtime.compress import Int8Compressor  # noqa: F401

@@ -1,0 +1,58 @@
+"""Elastic mesh management: rebuild the mesh when devices come and go,
+re-shard live state onto the new topology.
+
+Real deployment: `jax.devices()` shrinks when a host drops out of the
+coordination service; training must continue on the survivors (possibly
+with a smaller data axis) and re-expand later.  This module implements
+the re-mesh + re-shard procedure; on a single host it is exercised by
+carving sub-meshes out of the local device set (tests/test_runtime.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+
+@dataclasses.dataclass
+class ElasticMesh:
+    model_parallel: int = 1
+    axis_names: tuple = ("data", "model")
+
+    def build(self, devices: Optional[Sequence] = None) -> Mesh:
+        """Largest (data, model) mesh over the healthy device set.
+
+        `model_parallel` is fixed (weights layout must survive restarts);
+        the data axis absorbs device loss: data = n_devices // model.
+        """
+        devs = list(devices if devices is not None else jax.devices())
+        mp = self.model_parallel
+        dp = len(devs) // mp
+        if dp < 1:
+            raise RuntimeError(
+                f"{len(devs)} devices cannot host model_parallel={mp}")
+        devs = devs[: dp * mp]
+        arr = np.array(devs).reshape(dp, mp)
+        return Mesh(arr, self.axis_names)
+
+    def reshard(self, tree, specs, new_mesh: Mesh):
+        """Re-shard a live pytree onto a new mesh (device_put handles the
+        cross-topology transfer; on real hardware this is a resharding
+        collective, here a host round-trip at worst)."""
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, NamedSharding(new_mesh, s)),
+            tree, specs)
+
+    def shrink_then_grow(self, tree, specs, lost: int):
+        """Simulate losing `lost` devices then recovering (test helper).
+        Returns (tree_on_small, small_mesh, tree_back, full_mesh)."""
+        full = self.build()
+        devs = list(jax.devices())
+        small = self.build(devs[: len(devs) - lost])
+        t_small = self.reshard(tree, specs, small)
+        t_back = self.reshard(t_small, specs, full)
+        return t_small, small, t_back, full

@@ -1,0 +1,124 @@
+"""Per-architecture smoke tests: reduced config, one forward + train step +
+decode step on CPU; asserts output shapes and no NaNs (deliverable f)."""
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cfg_base
+from repro.models import build
+
+ARCH_MODULES = [
+    "pixtral_12b", "gemma_7b", "starcoder2_15b", "deepseek_coder_33b",
+    "qwen3_0_6b", "recurrentgemma_2b", "qwen2_moe_a2_7b",
+    "moonshot_v1_16b_a3b", "mamba2_130m", "musicgen_large",
+]
+
+
+def _reduced(mod_name):
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.reduced()
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+    }
+    if cfg.frontend != "none":
+        batch["frontend"] = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_len, cfg.frontend_dim)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("mod_name", ARCH_MODULES)
+def test_forward_and_loss(mod_name):
+    cfg = _reduced(mod_name)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    h, aux = model.forward(params, batch["tokens"], batch.get("frontend"))
+    assert h.shape == (2, 32, cfg.d_model)
+    assert not bool(jnp.any(jnp.isnan(h.astype(jnp.float32))))
+    loss = model.loss(params, batch, loss_chunk=16)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+
+
+@pytest.mark.parametrize("mod_name", ARCH_MODULES)
+def test_train_step_reduces_loss(mod_name):
+    cfg = _reduced(mod_name)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+
+    loss_fn = lambda p: model.loss(p, batch, loss_chunk=16)
+    l0, grads = jax.value_and_grad(loss_fn)(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(l0)) and bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+    # plain SGD step must reduce loss on the same batch
+    lr = 0.5 / max(float(gnorm), 1.0)
+    new_params = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    l1 = loss_fn(new_params)
+    assert float(l1) < float(l0)
+
+
+@pytest.mark.parametrize("mod_name", ARCH_MODULES)
+def test_decode_matches_prefill(mod_name):
+    """Greedy decode-step logits must match the teacher-forced forward."""
+    cfg = _reduced(mod_name)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 16
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+
+    # teacher-forced full forward (no frontend for decode parity test)
+    h, _ = model.forward(params, toks)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ref_logits = h[:, -1].astype(jnp.float32) @ head.astype(jnp.float32)
+
+    cache = model.init_cache(B, max_len=S)
+    logits = None
+    for t in range(S):
+        pos = jnp.full((B, 1), t, jnp.int32)
+        logits, cache = model.decode_step(params, cache, toks[:, t:t + 1], pos)
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(ref_logits), rtol=2e-3, atol=2e-3)
+
+
+def test_full_configs_registered():
+    import repro.configs as C
+    assert len(C.ARCH_IDS) == 10
+    for name in C.ARCH_IDS:
+        cfg = C.get(name)
+        cfg_shapes = C.applicable_shapes(cfg)
+        assert "train_4k" in cfg_shapes
+        if name in ("mamba2-130m", "recurrentgemma-2b"):
+            assert "long_500k" in cfg_shapes
+        else:
+            assert "long_500k" not in cfg_shapes
+
+
+def test_param_counts_plausible():
+    import repro.configs as C
+    expect = {  # sizes implied by the ASSIGNMENT configs (±40%); moonshot's
+        # 48L x 64e config is ~29B total (A3B refers to ACTIVE params —
+        # checked separately below)
+        "gemma-7b": 8.5e9, "starcoder2-15b": 16e9, "deepseek-coder-33b": 33e9,
+        "qwen3-0.6b": 0.6e9, "mamba2-130m": 0.13e9, "pixtral-12b": 12e9,
+        "qwen2-moe-a2.7b": 14.3e9, "moonshot-v1-16b-a3b": 29e9,
+        "musicgen-large": 2.4e9, "recurrentgemma-2b": 2.7e9,
+    }
+    for name, target in expect.items():
+        n = C.get(name).param_count()
+        assert 0.5 * target < n < 1.6 * target, (name, n, target)
+    # MoE active-param sanity (the AxB naming)
+    assert C.get("qwen2-moe-a2.7b").active_param_count() < 3.5e9
+    assert C.get("moonshot-v1-16b-a3b").active_param_count() < 6e9

@@ -1,0 +1,118 @@
+"""Compiler unit tests: IR, dedup passes, scheduler, cost model."""
+import numpy as np
+import pytest
+
+from repro.compiler import (workloads, passes, build_schedule, TaurusModel,
+                            CpuModel, trace)
+from repro.compiler.cost import xpu_model, ROUND_ROBIN
+from repro.core.params import PAPER_PARAMS
+
+
+def test_trace_builds_graph():
+    t = np.arange(16, dtype=np.uint64)
+
+    def f(x):
+        y = x + x
+        return y.lut(t).linear(np.ones((4, 2), np.int64))
+    g = trace(f, (4,))
+    assert g.count("add") == 1 and g.count("lut") == 1 and g.count("linear") == 1
+    assert g.nodes[-1].shape == (2,)
+
+
+def test_ks_dedup_counts_fanout():
+    t1 = np.arange(16, dtype=np.uint64)
+    t2 = t1[::-1].copy()
+
+    def f(x):
+        return x.lut(t1), x.lut(t2), x.lut(t1)
+    g = trace(f, (8,))
+    ops, stats = passes.lower_to_physical(g)
+    assert stats.ks_before == 24 and stats.ks_after == 8
+    assert stats.ks_saved_frac == pytest.approx(2 / 3)
+    # ACC-dedup: t1 reused across two nodes -> 2 unique tables
+    assert stats.acc_after == 2
+
+
+def test_dedup_disabled_is_identity():
+    t = np.arange(16, dtype=np.uint64)
+
+    def f(x):
+        return x.lut(t), x.lut(t)
+    g = trace(f, (4,))
+    _, s0 = passes.lower_to_physical(g, ks_dedup=False, acc_dedup=False)
+    assert s0.ks_after == s0.ks_before
+    assert s0.acc_after == s0.acc_before
+
+
+def test_schedule_levels_respect_dependencies():
+    t = np.arange(16, dtype=np.uint64)
+
+    def f(x):
+        return x.lut(t).lut(t).lut(t)      # strictly serial chain
+    g = trace(f, (1,))
+    ops, _ = passes.lower_to_physical(g)
+    sched = build_schedule(ops)
+    assert sched.total_pbs == 3
+    levels = [b.level for b in sched.batches if b.n_br]
+    assert levels == sorted(levels) and len(set(levels)) == 3
+
+
+def test_pbs_latency_matches_paper():
+    """The calibration anchor: GPT-2 params -> 6.16 ms; CNN-20 -> 0.28 ms."""
+    assert TaurusModel(PAPER_PARAMS["gpt2"]).pbs_latency == \
+        pytest.approx(6.16e-3, rel=0.02)
+    assert TaurusModel(PAPER_PARAMS["cnn20"]).pbs_latency == \
+        pytest.approx(0.283e-3, rel=0.02)
+
+
+def test_round_robin_shrinks_at_large_N():
+    m_small = TaurusModel(PAPER_PARAMS["cnn20"])      # N=2048
+    m_big = TaurusModel(PAPER_PARAMS["decision_tree"])  # N=65536
+    assert m_small.round_robin_eff == ROUND_ROBIN
+    assert m_big.round_robin_eff < ROUND_ROBIN
+
+
+def test_acc_buffer_default_matches_paper():
+    """9216 KB holds exactly 12 round-robin cts at GPT-2 params."""
+    m = TaurusModel(PAPER_PARAMS["gpt2"])
+    assert 12 * m.acc_bytes_per_ct == 9216 * 1024
+
+
+def test_xpu_slower_everywhere():
+    for name, w in workloads.build_all().items():
+        ops, _ = passes.lower_to_physical(w.graph)
+        sched = build_schedule(ops)
+        t, _ = TaurusModel(w.params).bandwidth_bound_runtime(sched)
+        tx, _ = xpu_model(w.params).bandwidth_bound_runtime(sched)
+        assert tx > 2.5 * t, (name, tx / t)
+
+
+def test_workload_model_within_3x_of_paper():
+    for name, w in workloads.build_all().items():
+        ops, _ = passes.lower_to_physical(w.graph)
+        sched = build_schedule(ops)
+        t, _ = TaurusModel(w.params).bandwidth_bound_runtime(sched)
+        ratio = (t * 1e3) / w.paper_taurus_ms
+        assert 1 / 3 < ratio < 3, (name, ratio)
+
+
+def test_grouped_sync_bandwidth_doubles():
+    """Observation 5: grouped synchronization nearly doubles bandwidth."""
+    m1 = TaurusModel(PAPER_PARAMS["gpt2"], sync_groups=1)
+    m2 = TaurusModel(PAPER_PARAMS["gpt2"], sync_groups=2)
+    bw1 = m1.batch_bandwidth()["bsk"]
+    bw2 = m2.batch_bandwidth()["bsk"]
+    assert bw2 == pytest.approx(2 * bw1)
+
+
+def test_interpret_matches_numpy_linear():
+    from repro.fhe_ml.executor import interpret
+    rng = np.random.default_rng(0)
+    W = rng.integers(-2, 3, (4, 3))
+
+    def f(x):
+        return x.linear(W) + 8
+    g = trace(f, (4,))
+    x = rng.integers(0, 4, (4,))
+    out = interpret(g, [x], 6)
+    np.testing.assert_array_equal(out[g.outputs[0]], (x @ W + 8) % 64)

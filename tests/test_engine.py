@@ -1,0 +1,67 @@
+"""Batched engine correctness: batched == unbatched == decrypt oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import glwe
+from repro.core.engine import TaurusEngine
+from repro.core.params import TEST_PARAMS
+from repro.core.pbs import TFHEContext
+
+U64 = jnp.uint64
+
+
+def make_ctx():
+    return TFHEContext.create(jax.random.key(40), TEST_PARAMS)
+
+
+def test_batched_pbs_matches_decrypt_oracle():
+    ctx = make_ctx()
+    eng = TaurusEngine.from_context(ctx)
+    mod = ctx.params.plaintext_modulus
+    msgs = np.array([0, 1, 2, 3, 3, 2, 1], dtype=np.uint64)  # odd B: pad path
+    cts = jax.vmap(lambda k, m: ctx.encrypt(k, m))(
+        jax.random.split(jax.random.key(41), len(msgs)), jnp.asarray(msgs)
+    )
+    table = [(m * 3 + 1) % mod for m in range(mod)]
+    poly = glwe.make_lut_poly(jnp.asarray(table, dtype=U64), ctx.params)
+    polys = jnp.broadcast_to(poly, (len(msgs),) + poly.shape)
+    out = eng.lut_batch(cts, polys)
+    got = np.asarray(jax.vmap(ctx.decrypt)(out))
+    want = np.array([table[int(m)] for m in msgs], dtype=np.uint64)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_batched_equals_xpu_unbatched_semantics():
+    """Round-robin batching must not change results vs the XPU-style loop."""
+    ctx = make_ctx()
+    eng = TaurusEngine.from_context(ctx)
+    mod = ctx.params.plaintext_modulus
+    msgs = jnp.asarray([3, 0, 2, 1], dtype=U64)
+    cts = jax.vmap(lambda k, m: ctx.encrypt(k, m))(
+        jax.random.split(jax.random.key(42), 4), msgs
+    )
+    poly = glwe.make_lut_poly(jnp.arange(mod, dtype=U64), ctx.params)
+    polys = jnp.broadcast_to(poly, (4,) + poly.shape)
+    a = eng.lut_batch(cts, polys)
+    b = eng.lut_batch_xpu(cts, polys)
+    # Same math/keys, but einsum reduction order differs -> FFT roundoff
+    # crosses decomposition rounding boundaries -> different (equally
+    # valid) ciphertexts. The CONTRACT is equal decryptions.
+    np.testing.assert_array_equal(
+        np.asarray(jax.vmap(ctx.decrypt)(a)), np.asarray(jax.vmap(ctx.decrypt)(b))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(jax.vmap(ctx.decrypt)(a)), np.asarray(msgs)
+    )
+
+
+def test_linear_ops_roundtrip():
+    ctx = make_ctx()
+    eng = TaurusEngine.from_context(ctx)
+    c1 = ctx.encrypt(jax.random.key(43), 1)
+    c2 = ctx.encrypt(jax.random.key(44), 2)
+    assert int(ctx.decrypt(eng.add(c1, c2))) == 3
+    assert int(ctx.decrypt(eng.scalar_mul(c1, 3))) == 3
+    assert int(ctx.decrypt(eng.add_plain(c2, 1))) == 3
+    assert int(ctx.decrypt(eng.trivial(2))) == 2

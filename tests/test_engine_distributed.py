@@ -1,0 +1,56 @@
+"""Distributed engine: clusters == mesh devices (subprocess: 4 fake devices).
+
+Run in a subprocess so the forced device count never leaks into the rest
+of the test session (dry-run contract: only dryrun.py sees >1 device).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import glwe
+    from repro.core.engine import TaurusEngine
+    from repro.core.params import TEST_PARAMS
+    from repro.core.pbs import TFHEContext
+
+    assert jax.device_count() == 4
+    mesh = jax.make_mesh((4,), ("data",))
+    ctx = TFHEContext.create(jax.random.key(50), TEST_PARAMS)
+    eng = TaurusEngine.from_context(ctx, mesh=mesh)
+    assert eng.n_clusters == 4 and eng.batch_size == 48  # paper: 4x12
+
+    mod = ctx.params.plaintext_modulus
+    msgs = jnp.arange(8, dtype=jnp.uint64) % mod
+    cts = jax.vmap(lambda k, m: ctx.encrypt(k, m))(
+        jax.random.split(jax.random.key(51), 8), msgs
+    )
+    table = [(3 * m + 2) % mod for m in range(mod)]
+    poly = glwe.make_lut_poly(jnp.asarray(table, dtype=jnp.uint64), ctx.params)
+    out = eng.lut_batch(cts, jnp.broadcast_to(poly, (8,) + poly.shape))
+    got = np.asarray(jax.vmap(ctx.decrypt)(out))
+    want = np.array([table[int(m)] for m in np.asarray(msgs)], dtype=np.uint64)
+    np.testing.assert_array_equal(got, want)
+    print("DISTRIBUTED_OK")
+    """
+)
+
+
+def test_engine_on_4_device_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True, text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "DISTRIBUTED_OK" in r.stdout

@@ -1,0 +1,118 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles.
+
+Shape/dtype sweeps per the deliverable contract; tolerances account for
+the f32 kernel vs f64 oracle gap (documented in DESIGN.md §3).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.fourstep_fft import factor_m
+
+jax.config.update("jax_enable_x64", True)
+
+
+# --- four-step FFT -----------------------------------------------------------
+
+@pytest.mark.parametrize("N", [256, 512, 2048, 8192, 65536])
+@pytest.mark.parametrize("B", [1, 3])
+def test_fft_forward_matches_ref(N, B):
+    rng = np.random.default_rng(N + B)
+    x = jnp.asarray(rng.integers(-(1 << 7), 1 << 7, (B, N)), dtype=jnp.float32)
+    got = np.asarray(ops.negacyclic_fft(x))
+    want = np.asarray(ref.fft_forward_ref(x))
+    scale = np.max(np.abs(want)) + 1.0
+    np.testing.assert_allclose(got / scale, want / scale, atol=2e-5)
+
+
+@pytest.mark.parametrize("N", [256, 2048, 65536])
+def test_fft_roundtrip(N):
+    rng = np.random.default_rng(N)
+    x = jnp.asarray(rng.integers(-(1 << 10), 1 << 10, (2, N)), dtype=jnp.float32)
+    back = np.asarray(ops.negacyclic_ifft(ops.negacyclic_fft(x)))
+    np.testing.assert_allclose(back, np.asarray(x), atol=0.25 * np.sqrt(N) / 8)
+
+
+def test_fft_factorization_matches_paper():
+    # the paper's FFT cluster: 2^15 points = 256-pt (FFT-A) x 128-pt (FFT-B)
+    assert factor_m(1 << 15) == (256, 128)
+
+
+@pytest.mark.parametrize("N", [512, 2048])
+def test_fft_negacyclic_convolution_property(N):
+    """Pointwise product in kernel transform domain == negacyclic conv."""
+    rng = np.random.default_rng(N + 7)
+    a = rng.integers(-64, 64, N)
+    b = rng.integers(-64, 64, N)
+    sa = ops.negacyclic_fft(jnp.asarray(a[None], dtype=jnp.float32))
+    sb = ops.negacyclic_fft(jnp.asarray(b[None], dtype=jnp.float32))
+    # complex pointwise product on stacked planes
+    pr = sa[:, 0] * sb[:, 0] - sa[:, 1] * sb[:, 1]
+    pi = sa[:, 0] * sb[:, 1] + sa[:, 1] * sb[:, 0]
+    got = np.asarray(ops.negacyclic_ifft(jnp.stack([pr, pi], axis=1)))[0]
+    # exact integer oracle
+    want = np.zeros(N, dtype=np.int64)
+    for i in range(N):
+        k = (i + np.arange(N)) % (2 * N)
+        np.add.at(want, k % N, np.where(k < N, a[i] * b, -(a[i] * b)))
+    np.testing.assert_allclose(got, want, atol=np.maximum(1.0, np.abs(want).max() * 3e-5))
+
+
+# --- BRU external-product MAC -------------------------------------------------
+
+@pytest.mark.parametrize("B,J,K,F", [(1, 2, 2, 256), (12, 4, 2, 1024),
+                                     (12, 6, 3, 2048), (48, 4, 2, 16384)])
+def test_bru_mac_matches_ref(B, J, K, F):
+    rng = np.random.default_rng(B * F)
+    dig = jnp.asarray(rng.standard_normal((B, 2, J, F)) * 100, dtype=jnp.float32)
+    bsk = jnp.asarray(rng.standard_normal((2, J, K, F)), dtype=jnp.float32)
+    got = np.asarray(ops.bru_mac(dig, bsk))
+    want = np.asarray(ref.external_product_mac_ref(dig, bsk))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+
+@pytest.mark.parametrize("block_f", [128, 512, 2048])
+def test_bru_mac_block_sweep(block_f):
+    rng = np.random.default_rng(block_f)
+    dig = jnp.asarray(rng.standard_normal((4, 2, 4, 2048)), dtype=jnp.float32)
+    bsk = jnp.asarray(rng.standard_normal((2, 4, 2, 2048)), dtype=jnp.float32)
+    got = np.asarray(ops.bru_mac(dig, bsk, block_f=block_f))
+    want = np.asarray(ref.external_product_mac_ref(dig, bsk))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+# --- LPU key-switch MAC (uint32-limb 64-bit arithmetic) -----------------------
+
+@pytest.mark.parametrize("B,S,T", [(1, 128, 65), (4, 1024, 513), (2, 4096, 257)])
+def test_keyswitch_mac_exact(B, S, T):
+    rng = np.random.default_rng(S + T)
+    digits = jnp.asarray(
+        rng.integers(-(1 << 15), 1 << 15, (B, S)), dtype=jnp.int32)
+    ksk = jnp.asarray(rng.integers(0, 1 << 64, (S, T), dtype=np.uint64))
+    got = np.asarray(ops.lpu_keyswitch_mac(digits, ksk))
+    want = np.asarray(ref.keyswitch_mac_ref(digits, ksk))
+    np.testing.assert_array_equal(got, want)  # EXACT mod 2^64
+
+
+def test_keyswitch_mac_extreme_digits():
+    """Full int32 digit range (negative, maximal) stays exact."""
+    digits = jnp.asarray(
+        [[-(1 << 31), (1 << 31) - 1, -1, 1, 0, 7, -7, 12345]], dtype=jnp.int32)
+    rng = np.random.default_rng(0)
+    ksk = jnp.asarray(rng.integers(0, 1 << 64, (8, 33), dtype=np.uint64))
+    got = np.asarray(ops.lpu_keyswitch_mac(digits, ksk, block_s=8))
+    want = np.asarray(ref.keyswitch_mac_ref(digits, ksk))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_keyswitch_mac_grid_accumulation():
+    """Multi-block S accumulation (sequential grid) is exact."""
+    rng = np.random.default_rng(3)
+    digits = jnp.asarray(rng.integers(-(1 << 12), 1 << 12, (3, 2048)), dtype=jnp.int32)
+    ksk = jnp.asarray(rng.integers(0, 1 << 64, (2048, 129), dtype=np.uint64))
+    for bs in (256, 512, 2048):
+        got = np.asarray(ops.lpu_keyswitch_mac(digits, ksk, block_s=bs))
+        want = np.asarray(ref.keyswitch_mac_ref(digits, ksk))
+        np.testing.assert_array_equal(got, want)

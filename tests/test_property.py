@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis) on the scheme's algebraic invariants
+and the compiler's dedup correctness."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import decompose as dec, fft, glwe, torus
+from repro.core.params import TEST_PARAMS
+
+U64 = jnp.uint64
+_SET = settings(max_examples=25, deadline=None)
+
+
+@given(st.lists(st.integers(0, 2 ** 64 - 1), min_size=1, max_size=16),
+       st.integers(2, 16), st.integers(1, 4))
+@_SET
+def test_decompose_recompose_error_bound(vals, base_log, level):
+    """|recompose(decompose(v)) - v| <= 2^(63 - base_log*level)."""
+    v = jnp.asarray(np.array(vals, dtype=np.uint64))
+    digits = dec.decompose(v, base_log, level)
+    assert int(jnp.max(jnp.abs(digits))) <= (1 << base_log) // 2
+    back = dec.recompose(digits, base_log, level)
+    err = torus.to_signed(back - v)
+    bound = 1 << max(64 - base_log * level - 1, 0)
+    assert int(jnp.max(jnp.abs(err))) <= bound
+
+
+@given(st.integers(0, 2 ** 32), st.integers(0, 2 ** 32))
+@_SET
+def test_torus_add_homomorphic(a, b):
+    """encode(a) + encode(b) == encode(a+b) on the torus."""
+    d = TEST_PARAMS.delta
+    ea = torus.encode(jnp.asarray(a, U64), d)
+    eb = torus.encode(jnp.asarray(b, U64), d)
+    expect = torus.encode(jnp.asarray((a + b), U64), d)
+    assert int(ea + eb) == int(expect)
+
+
+@given(st.lists(st.integers(-2 ** 20, 2 ** 20), min_size=8, max_size=8),
+       st.lists(st.integers(-2 ** 20, 2 ** 20), min_size=8, max_size=8))
+@_SET
+def test_negacyclic_mul_matches_schoolbook(a, b):
+    """FFT negacyclic product == coefficient-domain X^N+1 reduction."""
+    N = 8
+    av = np.array(a, np.int64)
+    bv = np.array(b, np.int64)
+    ref = np.zeros(N, dtype=np.object_)
+    for i in range(N):
+        for j in range(N):
+            k = i + j
+            s = int(av[i]) * int(bv[j])
+            if k >= N:
+                ref[(k - N)] -= s
+            else:
+                ref[k] += s
+    ref = jnp.asarray(np.array([x % (1 << 64) for x in ref],
+                               dtype=np.uint64))
+    got = fft.negacyclic_mul(jnp.asarray(av).astype(U64),
+                             jnp.asarray(bv).astype(U64))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@given(st.integers(0, 2 ** 63 - 1), st.integers(3, 12))
+@_SET
+def test_mod_switch_rounds_to_nearest(v, log2_2N):
+    from repro.core import lwe
+    out = int(lwe.mod_switch(jnp.asarray([v], U64), log2_2N)[0])
+    exact = v / 2 ** (64 - log2_2N)
+    assert abs(((out - exact + 2 ** (log2_2N - 1)) % 2 ** log2_2N)
+               - 2 ** (log2_2N - 1)) <= 0.5 + 1e-9
+
+
+@given(st.integers(0, 2 ** 16 - 1), st.integers(0, 15))
+@_SET
+def test_rotate_composes(r1, r2):
+    """X^r1 * (X^r2 * p) == X^(r1+r2 mod 2N) * p."""
+    N = 16
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(rng.integers(0, 2 ** 40, (N,), dtype=np.uint64))
+    a = glwe.rotate(glwe.rotate(p, r2 % (2 * N), N), r1 % (2 * N), N)
+    b = glwe.rotate(p, (r1 + r2) % (2 * N), N)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.lists(st.integers(0, 63), min_size=2, max_size=12),
+       st.integers(1, 4))
+@_SET
+def test_ks_dedup_invariant(vals, n_luts):
+    """KS-dedup never changes LUT results, only the key-switch count."""
+    from repro.compiler.ir import trace
+    from repro.compiler import passes
+    from repro.fhe_ml.executor import interpret
+    tables = [np.roll(np.arange(64, dtype=np.uint64), i) for i in range(n_luts)]
+
+    def f(x):
+        return tuple(x.lut(t) for t in tables)
+    g = trace(f, (len(vals),))
+    ref = interpret(g, [np.array(vals)], 6)
+    _, s_on = passes.lower_to_physical(g, ks_dedup=True)
+    _, s_off = passes.lower_to_physical(g, ks_dedup=False)
+    assert s_on.ks_after == len(vals)
+    assert s_off.ks_after == len(vals) * n_luts
+    # interpretation (semantics) is independent of the pass
+    ref2 = interpret(g, [np.array(vals)], 6)
+    for oid in g.outputs:
+        np.testing.assert_array_equal(ref[oid], ref2[oid])

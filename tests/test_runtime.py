@@ -1,0 +1,123 @@
+"""Runtime substrate: checkpoint/restart, fault handling, elastic
+re-mesh, gradient compression, data pipeline determinism."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticLMData
+from repro.runtime import ElasticMesh, FaultConfig, Int8Compressor, StepRunner
+
+
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        tree = {"a": jnp.arange(8.0), "b": [jnp.ones((3, 3)),
+                                            jnp.zeros((2,), jnp.int32)]}
+        for step in (10, 20, 30):
+            mgr.save(step, jax.tree.map(lambda x: x + step, tree))
+        assert mgr.latest_step() == 30
+        restored, step = mgr.restore(tree)
+        assert step == 30
+        np.testing.assert_allclose(restored["a"], np.arange(8.0) + 30)
+        # GC kept only 2
+        dirs = [n for n in os.listdir(d) if n.startswith("step_")]
+        assert len(dirs) == 2
+
+
+def test_checkpoint_atomicity_partial_write_ignored():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        tree = {"x": jnp.ones(4)}
+        mgr.save(5, tree)
+        # simulate a crashed write: directory without .done marker
+        os.makedirs(os.path.join(d, "step_00000099"))
+        assert mgr.latest_step() == 5
+
+
+def test_step_runner_retries_then_succeeds():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("boom")
+        return ("ok", {"loss": jnp.asarray(1.0)})
+
+    r = StepRunner(flaky, FaultConfig(max_retries=3))
+    out = r.run()
+    assert out[0] == "ok"
+    assert r.stats["retries"] == 2 and r.stats["failures"] == 2
+
+
+def test_step_runner_skips_nonfinite():
+    r = StepRunner(lambda: ("x", {"loss": jnp.asarray(float("nan"))}))
+    assert r.run() is None
+    assert r.stats["skipped_nonfinite"] == 1
+
+
+def test_elastic_reshard_preserves_values():
+    from jax.sharding import PartitionSpec as P
+    em = ElasticMesh(model_parallel=1)
+    full = em.build()
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    specs = {"w": P()}
+    t_small, small, t_back, _ = em.shrink_then_grow(tree, specs, lost=0)
+    np.testing.assert_allclose(t_back["w"], tree["w"])
+
+
+def test_int8_compression_error_feedback_converges():
+    """With EF, the accumulated compressed signal tracks the true sum."""
+    comp = Int8Compressor()
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=(64,)), jnp.float32) * 1e-3
+    ef = {"g": jnp.zeros((64,), jnp.float32)}
+    acc = jnp.zeros((64,))
+    for _ in range(50):
+        out, ef_leaf = comp.roundtrip({"g": g_true}, ef)
+        ef = ef_leaf
+        acc = acc + out["g"]
+    np.testing.assert_allclose(acc / 50, g_true, atol=2e-5)
+
+
+def test_int8_compression_bytes():
+    comp = Int8Compressor()
+    q, scale, err = comp.compress(jnp.ones((128,)), jnp.zeros((128,)))
+    assert q.dtype == jnp.int8            # 4x smaller than f32 on the wire
+
+
+def test_data_pipeline_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=128, seq_len=32, global_batch=4, seed=7)
+    d1 = SyntheticLMData(cfg)
+    d2 = SyntheticLMData(cfg)
+    b1 = d1.batch(123)
+    b2 = d2.batch(123)          # fresh instance, same step -> same batch
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(d1.batch(124)["tokens"], b1["tokens"])
+    # next-token alignment
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_train_restart_after_failure():
+    """Driver-level fault tolerance: injected failure -> checkpoint
+    restore -> run completes."""
+    from repro.launch.train import train
+    with tempfile.TemporaryDirectory() as d:
+        # without any checkpoint on disk an unrecoverable step fails loudly
+        with pytest.raises(RuntimeError):
+            train("qwen3-0.6b", steps=8, batch=2, seq=32,
+                  ckpt_dir=d, reduced=True, log_every=100, fail_at_step=4)
+    with tempfile.TemporaryDirectory() as d:
+        l1, _ = train("qwen3-0.6b", steps=4, batch=2, seq=32,
+                      ckpt_dir=d, reduced=True, log_every=100)
+        # phase 2: resume + survive an injected failure (restores the
+        # step-4 checkpoint, clears the fault, finishes)
+        l2, _ = train("qwen3-0.6b", steps=8, batch=2, seq=32,
+                      ckpt_dir=d, reduced=True, log_every=100, resume=True,
+                      fail_at_step=6)
+        assert len(l2) >= 4                 # resumed from step 4
