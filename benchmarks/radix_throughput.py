@@ -1,0 +1,82 @@
+"""Radix wide-integer throughput: digits/sec of batched carry rounds.
+
+The paper's round-robin BSK reuse (§III-B) is what makes per-digit PBS
+cheap enough for multi-digit integers: one carry-propagation round over
+all D digits is ONE `lut_batch` (the BSK streams once), where the
+Morphling-XPU-style baseline bootstraps the D digits independently.
+This benchmark measures that gap on the real CPU engine, then times
+whole `add`/`mul` ops end to end at 16 bits.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _bench(fn, *args, reps=3):
+    fn(*args).block_until_ready()          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    r.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> list:
+    import jax
+    import jax.numpy as jnp
+    from repro.core.engine import TaurusEngine
+    from repro.core.integer import (IntegerContext, carry_table, msg_table)
+    from repro.core.params import TEST_PARAMS, TEST_PARAMS_4BIT
+    from repro.core.pbs import TFHEContext
+
+    out = []
+    print("\n== Radix wide-integer throughput (CPU, real ciphertexts) ==")
+    print(f"{'params':12s} {'bits':>4s} {'D':>3s} {'batched_ms':>11s} "
+          f"{'xpu_ms':>9s} {'dig/s':>8s} {'reuse_gain':>10s}")
+    for params, bits in ((TEST_PARAMS, 16), (TEST_PARAMS_4BIT, 16)):
+        ctx = TFHEContext.create(jax.random.PRNGKey(0), params)
+        eng = TaurusEngine.from_context(ctx)
+        ic = IntegerContext.create(ctx, eng, pad_batches=False)
+        a = ic.encrypt(jax.random.PRNGKey(1), 0xBEEF, bits)
+        b = ic.encrypt(jax.random.PRNGKey(2), 0x1234, bits)
+        spec = a.spec
+        d = spec.n_digits
+        # one carry round: (msg, carry) extraction over all digits = one
+        # 2D-ciphertext batch vs 2D independent XPU bootstraps
+        batch = jnp.concatenate([a.digits, a.digits], axis=0)
+        tables = np.concatenate(
+            [np.tile(msg_table(params.width, spec.msg_bits), (d, 1)),
+             np.tile(carry_table(params.width, spec.msg_bits), (d, 1))])
+        polys = ic._polys(tables)
+        t_b = _bench(eng.lut_batch, batch, polys)
+        t_x = _bench(eng.lut_batch_xpu, batch, polys)
+        print(f"{params.name:12s} {bits:4d} {d:3d} {t_b * 1e3:11.1f} "
+              f"{t_x * 1e3:9.1f} {d / t_b:8.0f} {t_x / t_b:10.2f}")
+        out.append({"bench": "radix", "params": params.name, "bits": bits,
+                    "digits": d, "round_batched_ms": t_b * 1e3,
+                    "round_xpu_ms": t_x * 1e3, "digits_per_s": d / t_b,
+                    "reuse_gain": t_x / t_b})
+        # end-to-end ops (carry strategy auto: ripple at width 2, prefix
+        # at width >= 4)
+        for opname, fn in (("add", ic.add), ("mul", ic.mul)):
+            fn(a, b)                       # compile + warm
+            ic.reset_stats()
+            t0 = time.perf_counter()
+            res = fn(a, b)
+            res.digits.block_until_ready()
+            dt = time.perf_counter() - t0
+            print(f"  {opname}{bits}: {dt * 1e3:9.1f} ms, "
+                  f"{ic.stats['lut_batches']} batches, "
+                  f"{ic.stats['pbs']} PBS, "
+                  f"min batch {min(ic.stats['batch_sizes'])}")
+            out.append({"bench": "radix_op", "params": params.name,
+                        "op": opname, "bits": bits, "ms": dt * 1e3,
+                        "pbs": ic.stats["pbs"],
+                        "batches": ic.stats["lut_batches"]})
+    return out
+
+
+if __name__ == "__main__":
+    run()

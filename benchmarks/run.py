@@ -13,7 +13,8 @@ import os
 import sys
 import traceback
 
-ALL = ["fig5", "table2", "table4", "fig13", "fig15", "dedup", "engine"]
+ALL = ["fig5", "table2", "table4", "fig13", "fig15", "dedup", "engine",
+       "radix"]
 
 
 def main(argv=None):
@@ -24,11 +25,11 @@ def main(argv=None):
 
     from benchmarks import (fig5_addition, table2_workloads, table4_xpu,
                             fig13_bandwidth, fig15_utilization, dedup_stats,
-                            engine_wallclock)
+                            engine_wallclock, radix_throughput)
     mods = {"fig5": fig5_addition, "table2": table2_workloads,
             "table4": table4_xpu, "fig13": fig13_bandwidth,
             "fig15": fig15_utilization, "dedup": dedup_stats,
-            "engine": engine_wallclock}
+            "engine": engine_wallclock, "radix": radix_throughput}
 
     results, failed = [], []
     for name in which:

@@ -27,6 +27,76 @@ import numpy as np
 
 LINEAR_OPS = ("add", "sub", "addc", "mulc", "linear", "concat", "reshape")
 
+# Radix wide-integer ops (repro.core.integer): a tensor whose LAST axis is
+# the little-endian digit vector of a W-bit integer.  Each op expands into
+# a fixed schedule of batched-PBS rounds; `radix_round_plan` is the single
+# source of truth for that schedule, shared by the lowering in
+# `repro.compiler.passes` and by PBS accounting here.
+RADIX_OPS = ("radix_add", "radix_sub", "radix_mul", "radix_relu", "radix_cmp")
+
+
+def _ceil_log2(n: int) -> int:
+    return max(0, (n - 1).bit_length())
+
+
+def radix_round_plan(op: str, n_digits: int) -> list:
+    """Batched-PBS rounds of one radix op over a D-digit vector (prefix
+    carry strategy of `IntegerContext`).  Each round is a dict:
+      luts     PBS applications in the round's single batch
+      sources  distinct input ciphertexts feeding those LUTs (the
+               key-switch count after KS-dedup: fanout shares one KS)
+      tables   symbolic accumulator-table ids (ACC-dedup keys)
+      macs     LPU MACs of the round's linear stitch-up
+    """
+    d = n_digits
+
+    def add_plan():
+        rounds = [{"luts": 2 * d, "sources": d,
+                   "tables": ("radix/msg", "radix/sigma"), "macs": d}]
+        for _ in range(_ceil_log2(d)):
+            rounds.append({"luts": d, "sources": d,
+                           "tables": ("radix/combine",), "macs": d})
+        rounds.append({"luts": d, "sources": d,
+                       "tables": ("radix/msg",), "macs": d})
+        return rounds
+
+    if op in ("radix_add", "radix_sub"):
+        return add_plan()
+    if op == "radix_mul":
+        t = d * (d + 1) // 2
+        rounds = [{"luts": 2 * t, "sources": t,
+                   "tables": ("radix/pp_lo", "radix/pp_hi"), "macs": 2 * t}]
+        for _ in range(_ceil_log2(d) + 1):       # carry-save compression
+            rounds.append({"luts": 2 * d, "sources": d,
+                           "tables": ("radix/msg", "radix/carry"),
+                           "macs": 2 * d})
+        # no trailing propagation: with the standard msg/carry split the
+        # compression already leaves every digit < base
+        return rounds
+    if op == "radix_relu":
+        return [{"luts": 1, "sources": 1, "tables": ("radix/sign",), "macs": 0},
+                {"luts": d, "sources": d, "tables": ("radix/mask",), "macs": d}]
+    if op == "radix_cmp":
+        rounds = [{"luts": d, "sources": d, "tables": ("radix/cmp",),
+                   "macs": d}]
+        n = d
+        while n > 1:
+            # odd lane counts: the leftover verdict passes through with no
+            # PBS, so only floor(n/2) combines dispatch
+            rounds.append({"luts": n // 2, "sources": n // 2,
+                           "tables": ("radix/cmp_combine",), "macs": n // 2})
+            n = -(-n // 2)
+        return rounds
+    raise ValueError(op)
+
+
+def radix_vectors(node) -> int:
+    """How many independent digit vectors a radix node processes.  cmp
+    collapses the digit axis, so its OUTPUT already counts vectors."""
+    if node.op == "radix_cmp":
+        return node.n_elements
+    return node.n_elements // node.attrs["n_digits"]
+
 
 @dataclasses.dataclass
 class Node:
@@ -67,7 +137,13 @@ class Graph:
 
     def lut_applications(self) -> int:
         """Total element-level PBS operations (before any dedup)."""
-        return sum(n.n_elements for n in self.nodes if n.op == "lut")
+        total = sum(n.n_elements for n in self.nodes if n.op == "lut")
+        for n in self.nodes:
+            if n.op in RADIX_OPS:
+                total += radix_vectors(n) * sum(
+                    r["luts"]
+                    for r in radix_round_plan(n.op, n.attrs["n_digits"]))
+        return total
 
 
 class FheTensor:
@@ -127,6 +203,39 @@ class FheTensor:
 
     def reshape(self, *shape):
         n = self.graph.add("reshape", (self.node.id,), shape)
+        return FheTensor(self.graph, n)
+
+    # -- radix wide-integer ops (last axis = digit vector) ------------------
+    def _radix_bin(self, other: "FheTensor", op: str, msg_bits: int):
+        assert self.shape == other.shape and self.shape, (
+            "radix ops need matching digit-vector shapes")
+        n = self.graph.add(op, (self.node.id, other.node.id), self.shape,
+                           msg_bits=msg_bits, n_digits=self.shape[-1])
+        return FheTensor(self.graph, n)
+
+    def radix_add(self, other, msg_bits: int):
+        """Carry-propagated wide-integer add over the digit axis."""
+        return self._radix_bin(other, "radix_add", msg_bits)
+
+    def radix_sub(self, other, msg_bits: int):
+        return self._radix_bin(other, "radix_sub", msg_bits)
+
+    def radix_mul(self, other, msg_bits: int):
+        """Schoolbook wide-integer product mod 2^(msg_bits * D)."""
+        return self._radix_bin(other, "radix_mul", msg_bits)
+
+    def radix_relu(self, msg_bits: int):
+        """Two's-complement max(x, 0) over the digit vector."""
+        n = self.graph.add("radix_relu", (self.node.id,), self.shape,
+                           msg_bits=msg_bits, n_digits=self.shape[-1])
+        return FheTensor(self.graph, n)
+
+    def radix_cmp(self, other, msg_bits: int):
+        """Three-way compare -> one ciphertext per digit vector."""
+        assert self.shape == other.shape and self.shape
+        n = self.graph.add("radix_cmp", (self.node.id, other.node.id),
+                           self.shape[:-1] + (1,),
+                           msg_bits=msg_bits, n_digits=self.shape[-1])
         return FheTensor(self.graph, n)
 
 

@@ -23,7 +23,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.compiler.ir import Graph, Node
+from repro.compiler.ir import (Graph, Node, RADIX_OPS, radix_round_plan,
+                               radix_vectors)
 
 
 @dataclasses.dataclass
@@ -53,9 +54,14 @@ class DedupStats:
 
 
 def _levels(g: Graph) -> dict:
+    """Dependency depth per node.  A radix op spans as many levels as it
+    has batched-PBS rounds, so chained radix ops serialize correctly in
+    the schedule."""
     lvl = {}
     for n in g.nodes:
-        lvl[n.id] = 1 + max((lvl[i] for i in n.inputs), default=-1)
+        depth = (len(radix_round_plan(n.op, n.attrs["n_digits"]))
+                 if n.op in RADIX_OPS else 1)
+        lvl[n.id] = depth + max((lvl[i] for i in n.inputs), default=-1)
     return lvl
 
 
@@ -100,6 +106,41 @@ def lower_to_physical(g: Graph, *, ks_dedup: bool = True,
             ops.append(PhysOp("BR", n.id, n.n_elements, lvl[n.id],
                               table_id=tid))
             ops.append(PhysOp("SE", n.id, n.n_elements, lvl[n.id]))
+        elif n.op in RADIX_OPS:
+            # one KS/BR/SE wave per batched round (see ir.radix_round_plan).
+            # Within a round the (msg, carry)-style LUT fanout reads the
+            # SAME digit ciphertexts, so KS-dedup collapses `luts` key-
+            # switches down to `sources` — the digit-batch analogue of the
+            # tensor-fanout dedup above.
+            vecs = radix_vectors(n)
+            plan = radix_round_plan(n.op, n.attrs["n_digits"])
+            base_lvl = lvl[n.id] - len(plan) + 1
+            for r, rd in enumerate(plan):
+                luts = rd["luts"] * vecs
+                srcs = rd["sources"] * vecs
+                stats.ks_before += luts
+                ks_n = srcs if ks_dedup else luts
+                stats.ks_after += ks_n
+                ops.append(PhysOp("KS", n.id, ks_n, base_lvl + r))
+                stats.acc_before += luts
+                tid = 0
+                if acc_dedup:
+                    for tkey in rd["tables"]:
+                        key = tkey.encode()
+                        if key not in tables:
+                            tables[key] = len(tables)
+                            stats.acc_after += 1
+                        tid = tables[key]
+                else:
+                    stats.acc_after += luts
+                    tid = len(tables)
+                    tables[rd["tables"][0].encode() + bytes([tid % 251])] = tid
+                ops.append(PhysOp("BR", n.id, luts, base_lvl + r,
+                                  table_id=tid))
+                ops.append(PhysOp("SE", n.id, luts, base_lvl + r))
+                if rd.get("macs"):
+                    ops.append(PhysOp("LIN", n.id, rd["macs"] * vecs,
+                                      base_lvl + r, macs=rd["macs"] * vecs))
         elif n.op == "linear":
             W = n.attrs["W"]
             macs = n.n_elements * W.shape[0]

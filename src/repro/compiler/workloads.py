@@ -212,6 +212,48 @@ def xgboost_graph(n_trees: int, depth: int, width: int, n_features: int = 16,
     return trace(f, *([(1,)] * n_features))
 
 
+# ---------------------------------------------------------------------------
+# wide-integer (radix) workloads — the "beyond Table II" direction: the
+# multi-bit digit space carries 16/32-bit integers, every carry round one
+# PBS batch (repro.core.integer).  No paper reference numbers; these feed
+# the dedup/scheduler/cost pipeline (exercised by tests/test_compiler.py).
+
+def wide_add_graph(bits: int = 32, msg_bits: int = 4) -> Graph:
+    d = bits // msg_bits
+
+    def f(a, b):
+        return a.radix_add(b, msg_bits)
+    return trace(f, (d,), (d,))
+
+
+def wide_mul_graph(bits: int = 16, msg_bits: int = 4) -> Graph:
+    d = bits // msg_bits
+
+    def f(a, b):
+        return a.radix_mul(b, msg_bits)
+    return trace(f, (d,), (d,))
+
+
+def wide_affine_relu_graph(bits: int = 16, msg_bits: int = 4) -> Graph:
+    """ReLU(a * w + b): the quantized-inference inner loop on wide ints."""
+    d = bits // msg_bits
+
+    def f(a, w, b):
+        return a.radix_mul(w, msg_bits).radix_add(b, msg_bits).radix_relu(
+            msg_bits)
+    return trace(f, (d,), (d,), (d,))
+
+
+def build_wide() -> dict:
+    """name -> (graph, params); xgboost's 8-bit space gives 4-bit digits."""
+    p = PAPER_PARAMS["xgboost"]
+    return {
+        "wide_add32": (wide_add_graph(32, 4), p),
+        "wide_mul16": (wide_mul_graph(16, 4), p),
+        "wide_affine_relu16": (wide_affine_relu_graph(16, 4), p),
+    }
+
+
 @dataclasses.dataclass
 class Workload:
     name: str

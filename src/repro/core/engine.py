@@ -90,6 +90,11 @@ class TaurusEngine:
             out = fn(cts, lut_polys, self.bsk_f, self.ksk, self.params)
         return out[:B]
 
+    def lut_batch_tables(self, cts: jax.Array, tables) -> jax.Array:
+        """lut_batch from per-ciphertext INTEGER tables (B, 2^width):
+        encodes each row as a test polynomial, then one batched PBS."""
+        return self.lut_batch(cts, glwe.make_lut_polys(tables, self.params))
+
     def lut_batch_xpu(self, cts: jax.Array, lut_polys: jax.Array) -> jax.Array:
         """Morphling-XPU-style baseline: no cross-ciphertext BSK reuse."""
         return batch_mod.pbs_unbatched_loop(

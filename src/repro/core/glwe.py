@@ -96,3 +96,9 @@ def make_lut_poly(table: jax.Array, params: TFHEParams) -> jax.Array:
     # multiply by X^{-reps/2}: rotate by 2N - reps//2
     v = rotate(v, jnp.asarray(2 * N - reps // 2), N)
     return v
+
+
+def make_lut_polys(tables: jax.Array, params: TFHEParams) -> jax.Array:
+    """Batched `make_lut_poly`: (B, 2^width) integer tables -> (B, N)."""
+    return jax.vmap(lambda t: make_lut_poly(t, params))(
+        jnp.asarray(tables, dtype=U64))

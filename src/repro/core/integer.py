@@ -1,0 +1,542 @@
+"""Radix wide-integer arithmetic on the batched engine (the paper's
+"multi-bit TFHE unlocks integer workloads" claim, §I Obs. 1-2).
+
+A W-bit integer is a little-endian vector of D = W / msg_bits DIGITS;
+each digit is an ordinary multi-bit LWE ciphertext whose 2^width
+plaintext space is split into `msg_bits` of message and
+`width - msg_bits` of carry headroom (the Concrete/TFHE-rs radix
+representation).  Linear digit work (adds, negation, plaintext shifts)
+is LPU-only; every nonlinear step — carry extraction, partial products,
+comparisons, sign masking — is ONE batched PBS dispatched through
+`TaurusEngine.lut_batch`, so a carry-propagation round over all D digits
+streams the BSK once for the whole digit vector instead of D times
+(round-robin key reuse, paper §III-B / Fig. 13).
+
+Carry propagation strategies:
+  ripple  D rounds of batched (msg, carry) extraction; works for any
+          width >= 2.
+  prefix  Hillis-Steele scan over generate/propagate statuses:
+          2 + ceil(log2(D)) batched rounds; needs width >= 4 because the
+          status combine is a bivariate LUT over two 2-bit statuses.
+Both run every round as a single `lut_batch` call of >= D ciphertexts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import glwe, lwe, torus
+from repro.core.engine import TaurusEngine
+from repro.core.params import TFHEParams
+from repro.core.pbs import TFHEContext
+
+U64 = jnp.uint64
+
+
+# ---------------------------------------------------------------------------
+# digit layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RadixSpec:
+    """Digit layout of a W-bit integer under one TFHEParams message space."""
+    params: TFHEParams
+    bits: int                 # integer width W (8 / 16 / 32 ...)
+    msg_bits: int             # message bits per digit
+
+    @classmethod
+    def create(cls, params: TFHEParams, bits: int,
+               msg_bits: int | None = None) -> "RadixSpec":
+        m = msg_bits if msg_bits is not None else max(1, params.width // 2)
+        spec = cls(params, bits, m)
+        spec.validate()
+        return spec
+
+    def validate(self) -> None:
+        assert self.msg_bits >= 1
+        # carry space must cover at least the message space: a digit can
+        # then absorb base-1 worth of carries, and bivariate LUTs
+        # (a*base + b) fit the plaintext window.
+        assert 2 * self.msg_bits <= self.params.width, (
+            f"need width >= 2*msg_bits for carries+bivariate LUTs "
+            f"(width={self.params.width}, msg_bits={self.msg_bits})")
+        assert self.bits % self.msg_bits == 0, (
+            "integer width must be a whole number of digits")
+
+    @property
+    def base(self) -> int:
+        return 1 << self.msg_bits
+
+    @property
+    def n_digits(self) -> int:
+        return self.bits // self.msg_bits
+
+    @property
+    def modulus(self) -> int:
+        return 1 << self.bits
+
+    # -- plaintext encode/decode -------------------------------------------
+    def to_digits(self, value: int) -> np.ndarray:
+        v = int(value) % self.modulus
+        return np.array(
+            [(v >> (i * self.msg_bits)) & (self.base - 1)
+             for i in range(self.n_digits)], dtype=np.uint64)
+
+    def from_digits(self, digits) -> int:
+        """Weighted recombination mod 2^bits.  Tolerates un-propagated
+        carries (digit values >= base) — the weighted sum still lands on
+        the represented integer."""
+        v = 0
+        for i, d in enumerate(np.asarray(digits, dtype=np.uint64).tolist()):
+            v += int(d) << (i * self.msg_bits)
+        return v % self.modulus
+
+
+@dataclasses.dataclass
+class RadixCiphertext:
+    """Encrypted wide integer: (D, k*N+1) big-key LWE digit ciphertexts,
+    little-endian along axis 0."""
+    spec: RadixSpec
+    digits: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# LUT tables (all indexed by the full 2^width plaintext window)
+# ---------------------------------------------------------------------------
+
+def _tbl(width: int, fn) -> np.ndarray:
+    n = 1 << width
+    return np.array([fn(v) % n for v in range(n)], dtype=np.uint64)
+
+
+@functools.lru_cache(maxsize=None)
+def msg_table(width: int, msg_bits: int) -> np.ndarray:
+    return _tbl(width, lambda v: v & ((1 << msg_bits) - 1))
+
+
+@functools.lru_cache(maxsize=None)
+def carry_table(width: int, msg_bits: int) -> np.ndarray:
+    return _tbl(width, lambda v: v >> msg_bits)
+
+
+@functools.lru_cache(maxsize=None)
+def sigma_table(width: int, msg_bits: int) -> np.ndarray:
+    """Carry status of a digit sum s <= 2*base-1:
+    2 = generate (s >= base), 1 = propagate (s == base-1), 0 = neither."""
+    base = 1 << msg_bits
+    return _tbl(width, lambda s: 2 if s >= base else (1 if s == base - 1 else 0))
+
+
+@functools.lru_cache(maxsize=None)
+def combine_table(width: int, to_carry: bool) -> np.ndarray:
+    """Status monoid hi o lo (hi = more significant): hi unless hi is
+    propagate, then lo.  Input is the radix-4 pack hi*4 + lo.  With
+    to_carry the resolved status is mapped straight to the carry bit
+    (generate -> 1), folding the carry readout into the final scan round."""
+    def f(c):
+        hi, lo = (c >> 2) & 3, c & 3
+        r = hi if hi != 1 else lo
+        return (1 if r == 2 else 0) if to_carry else r
+    return _tbl(width, f)
+
+
+@functools.lru_cache(maxsize=None)
+def status_carry_table(width: int) -> np.ndarray:
+    """sigma -> carry bit, for scan lanes whose prefix is already final."""
+    return _tbl(width, lambda s: 1 if (s & 3) == 2 else 0)
+
+
+@functools.lru_cache(maxsize=None)
+def status_id_table(width: int) -> np.ndarray:
+    """sigma -> sigma: lanes below the scan distance ride along in the
+    round's batch (keeps every carry round at >= D ciphertexts)."""
+    return _tbl(width, lambda s: s & 3)
+
+
+@functools.lru_cache(maxsize=None)
+def pp_table(width: int, msg_bits: int, hi: bool) -> np.ndarray:
+    """Partial product of two digits packed as a*base + b."""
+    base = 1 << msg_bits
+    def f(c):
+        a, b = c >> msg_bits, c & (base - 1)
+        p = a * b
+        return p >> msg_bits if hi else p & (base - 1)
+    return _tbl(width, f)
+
+
+@functools.lru_cache(maxsize=None)
+def cmp_digit_table(width: int, msg_bits: int) -> np.ndarray:
+    """Digit comparison a*base + b -> {0: a==b, 1: a<b, 2: a>b}."""
+    base = 1 << msg_bits
+    def f(c):
+        a, b = c >> msg_bits, c & (base - 1)
+        return 0 if a == b else (1 if a < b else 2)
+    return _tbl(width, f)
+
+
+@functools.lru_cache(maxsize=None)
+def cmp_combine_table(width: int) -> np.ndarray:
+    """Lexicographic verdict hi*4 + lo -> hi unless digits tied."""
+    def f(c):
+        hi, lo = (c >> 2) & 3, c & 3
+        return hi if hi != 0 else lo
+    return _tbl(width, f)
+
+
+@functools.lru_cache(maxsize=None)
+def sign_table(width: int, msg_bits: int) -> np.ndarray:
+    """Top digit -> two's-complement sign bit (its own MSB)."""
+    base = 1 << msg_bits
+    return _tbl(width, lambda d: 1 if (d & (base - 1)) >= base // 2 else 0)
+
+
+@functools.lru_cache(maxsize=None)
+def mask_table(width: int, msg_bits: int) -> np.ndarray:
+    """sign*base + digit -> digit if sign == 0 else 0 (ReLU masking)."""
+    base = 1 << msg_bits
+    return _tbl(width, lambda c: 0 if c >= base else c)
+
+
+def _pad_batch(b: int) -> int:
+    """Quantize PBS batch sizes so the jitted pbs_batch compiles for a
+    small, reusable set of shapes: a floor of 16, then 32, then
+    multiples of 32.  Small rounds (a lone sign PBS, a compare-tree
+    tail) thus dispatch up to 16 bootstraps for a handful of logical
+    ones — on this engine a recompile (~seconds) costs far more than
+    the padded blind rotations (~ms), so fewer shapes wins."""
+    if b <= 32:
+        return 1 << max(4, (b - 1).bit_length())
+    return -(-b // 32) * 32
+
+
+# ---------------------------------------------------------------------------
+# client + server API
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class IntegerContext:
+    """Encrypt/compute/decrypt wide integers over a TFHEContext's keys,
+    dispatching every nonlinear round through `TaurusEngine.lut_batch`."""
+    ctx: TFHEContext
+    engine: TaurusEngine
+    pad_batches: bool = True
+    stats: dict = dataclasses.field(default_factory=lambda: {
+        "pbs": 0, "lut_batches": 0, "batch_sizes": [], "dispatch_sizes": []})
+    _poly_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    @classmethod
+    def create(cls, ctx: TFHEContext, engine: TaurusEngine | None = None,
+               **kw) -> "IntegerContext":
+        return cls(ctx, engine or TaurusEngine.from_context(ctx), **kw)
+
+    @property
+    def params(self) -> TFHEParams:
+        return self.ctx.params
+
+    def spec(self, bits: int, msg_bits: int | None = None) -> RadixSpec:
+        return RadixSpec.create(self.params, bits, msg_bits)
+
+    def reset_stats(self) -> None:
+        self.stats.update(pbs=0, lut_batches=0, batch_sizes=[],
+                          dispatch_sizes=[])
+
+    # -- client side --------------------------------------------------------
+    def encrypt(self, key: jax.Array, value: int, bits: int,
+                msg_bits: int | None = None) -> RadixCiphertext:
+        spec = self.spec(bits, msg_bits)
+        digs = jnp.asarray(spec.to_digits(value))
+        cts = jax.vmap(lambda k, m: self.ctx.encrypt(k, m))(
+            jax.random.split(key, spec.n_digits), digs)
+        return RadixCiphertext(spec, cts)
+
+    def decrypt_digits(self, rct: RadixCiphertext) -> np.ndarray:
+        return np.asarray(jax.vmap(self.ctx.decrypt)(rct.digits))
+
+    def decrypt(self, rct: RadixCiphertext) -> int:
+        return rct.spec.from_digits(self.decrypt_digits(rct))
+
+    def digit_noise(self, rct: RadixCiphertext, value: int) -> np.ndarray:
+        """Signed per-digit residual noise (torus units) against the digits
+        of the expected plaintext `value` — valid on carry-propagated
+        ciphertexts, whose digits are all below base."""
+        expect = jnp.asarray(rct.spec.to_digits(value))
+        return np.asarray(jax.vmap(self.ctx.decrypt_noise)(rct.digits, expect))
+
+    # -- the one nonlinear primitive ----------------------------------------
+    def _lut(self, cts: jax.Array, tables: np.ndarray) -> jax.Array:
+        """One PBS batch: per-ciphertext integer tables -> refreshed cts.
+
+        Pads the batch to a quantized size (repeating real ciphertexts)
+        so repeated rounds reuse one compiled pbs_batch shape."""
+        b = int(cts.shape[0])
+        tables = np.ascontiguousarray(np.asarray(tables, dtype=np.uint64))
+        dispatch = cts
+        dtables = tables
+        if self.pad_batches:
+            p = _pad_batch(b)
+            if p > b:
+                reps = -(-p // b)
+                dispatch = jnp.tile(cts, (reps, 1))[:p]
+                dtables = np.tile(tables, (reps, 1))[:p]
+        out = self.engine.lut_batch(dispatch, self._polys(dtables))
+        self.stats["lut_batches"] += 1
+        self.stats["pbs"] += b
+        self.stats["batch_sizes"].append(b)
+        self.stats["dispatch_sizes"].append(int(dispatch.shape[0]))
+        return out[:b]
+
+    def _polys(self, tables: np.ndarray) -> jax.Array:
+        # byte-keyed cache: carry rounds reuse the same few tables, so the
+        # encode runs once per (table set, shape)
+        key = tables.tobytes()
+        if key not in self._poly_cache:
+            self._poly_cache[key] = glwe.make_lut_polys(tables, self.params)
+        return self._poly_cache[key]
+
+    def _trivial_digits(self, spec: RadixSpec, value: int) -> jax.Array:
+        m = torus.encode(jnp.full((spec.n_digits,), value, dtype=U64),
+                         self.params.delta)
+        return lwe.trivial(m, self.params.big_n)
+
+    # -- carry propagation ---------------------------------------------------
+    def _extract_round(self, digits: jax.Array, spec: RadixSpec) -> jax.Array:
+        """One batched (msg, carry) extraction + shifted re-add: the ripple
+        round.  Batch size 2D, one key-stream for the whole vector."""
+        d = spec.n_digits
+        w, m = self.params.width, spec.msg_bits
+        batch = jnp.concatenate([digits, digits], axis=0)
+        tables = np.concatenate([np.tile(msg_table(w, m), (d, 1)),
+                                 np.tile(carry_table(w, m), (d, 1))])
+        out = self._lut(batch, tables)
+        msg, carry = out[:d], out[d:]
+        return msg.at[1:].add(carry[:-1])
+
+    def _propagate_ripple(self, digits: jax.Array, spec: RadixSpec,
+                          rounds: int) -> jax.Array:
+        for _ in range(rounds):
+            digits = self._extract_round(digits, spec)
+        return digits
+
+    def _propagate_prefix(self, digits: jax.Array, spec: RadixSpec) -> jax.Array:
+        """Hillis-Steele carry scan.  Preconditions: width >= 4, every
+        digit value <= 2*base - 1 and already including its incoming
+        additions (no external carry-in)."""
+        d = spec.n_digits
+        w, m = self.params.width, spec.msg_bits
+        # round 1: messages + generate/propagate statuses, one 2D batch
+        batch = jnp.concatenate([digits, digits], axis=0)
+        tables = np.concatenate([np.tile(msg_table(w, m), (d, 1)),
+                                 np.tile(sigma_table(w, m), (d, 1))])
+        out = self._lut(batch, tables)
+        msg, sig = out[:d], out[d:]
+        # scan rounds: log2(D) bivariate status combines.  Every round
+        # dispatches all D lanes — lanes below the scan distance pass
+        # through a univariate status table — and the last round's LUTs
+        # map the resolved status straight to the carry bit.
+        dists = []
+        dd = 1
+        while dd < d:
+            dists.append(dd)
+            dd *= 2
+        carries = None
+        for i, dd in enumerate(dists):
+            last = i == len(dists) - 1
+            comb = lwe.add(lwe.scalar_mul(sig[dd:], 4), sig[:-dd])
+            batch = jnp.concatenate([sig[:dd], comb], axis=0)
+            lo_tbl = status_carry_table(w) if last else status_id_table(w)
+            tables = np.concatenate(
+                [np.tile(lo_tbl, (dd, 1)),
+                 np.tile(combine_table(w, to_carry=last), (d - dd, 1))])
+            out = self._lut(batch, tables)
+            if last:
+                carries = out
+            else:
+                sig = out
+        # final: add carries and fold digit sums (<= base) back below base.
+        # msg_table is the identity below base, so digit 0 rides along and
+        # the round stays a full-width D batch.
+        summed = msg.at[1:].add(carries[:-1])
+        return self._lut(summed, np.tile(msg_table(w, m), (d, 1)))
+
+    def propagate(self, rct: RadixCiphertext, max_val: int | None = None,
+                  strategy: str = "auto") -> RadixCiphertext:
+        """Carry-propagate so every digit lands in [0, base).
+
+        max_val bounds the current per-digit plaintext value (defaults to
+        the whole 2^width window); values above 2*base-2 are first folded
+        down by batched extraction rounds.  The 2*base-2 ceiling keeps
+        every intermediate carry in {0, 1} — the prefix statuses cannot
+        express a carry of 2 (which v = 2*base-1 plus an incoming carry
+        would produce)."""
+        spec = rct.spec
+        base, w = spec.base, self.params.width
+        digits = rct.digits
+        if max_val is None:
+            max_val = (1 << w) - 1
+        # pre-reduction: each round maps v -> (v mod base) + (v' >> msg)
+        while max_val > 2 * base - 2:
+            max_val = (base - 1) + (max_val >> spec.msg_bits)
+            digits = self._extract_round(digits, spec)
+        if strategy == "auto":
+            strategy = "prefix" if (w >= 4 and spec.n_digits > 1) else "ripple"
+        if strategy == "prefix":
+            # the radix-4 status pack needs a 4-bit window, and a single
+            # digit has no carries to scan — explicit misuse would decrypt
+            # wrong, not just slow
+            assert w >= 4 and spec.n_digits > 1, (
+                "prefix carry scan needs width >= 4 and more than one digit")
+            digits = self._propagate_prefix(digits, spec)
+        else:
+            digits = self._propagate_ripple(digits, spec, spec.n_digits)
+        return RadixCiphertext(spec, digits)
+
+    # -- arithmetic -----------------------------------------------------------
+    def add(self, a: RadixCiphertext, b: RadixCiphertext) -> RadixCiphertext:
+        assert a.spec == b.spec
+        s = lwe.add(a.digits, b.digits)
+        return self.propagate(RadixCiphertext(a.spec, s),
+                              max_val=2 * a.spec.base - 2)
+
+    def sub(self, a: RadixCiphertext, b: RadixCiphertext) -> RadixCiphertext:
+        """a - b mod 2^bits, via base-complement: a + ~b + 1."""
+        assert a.spec == b.spec
+        spec = a.spec
+        neg = lwe.sub(self._trivial_digits(spec, spec.base - 1), b.digits)
+        s = lwe.add(a.digits, neg)
+        s = s.at[0, -1].add(U64(self.params.delta))        # the +1 at the LSB
+        # max_val describes digits that can RECEIVE a carry (<= 2*base-2);
+        # only digit 0 holds the extra +1, and it has no incoming carry,
+        # so its 2*base-1 ceiling still yields a single outgoing carry.
+        return self.propagate(RadixCiphertext(spec, s),
+                              max_val=2 * spec.base - 2)
+
+    def _pp_batch(self, comb: jax.Array, spec: RadixSpec):
+        """Dispatch packed digit pairs (a*base + b) through BOTH partial-
+        product halves in one batch; returns (lo, hi) digit vectors."""
+        t = int(comb.shape[0])
+        w, m = self.params.width, spec.msg_bits
+        batch = jnp.concatenate([comb, comb], axis=0)
+        tables = np.concatenate([np.tile(pp_table(w, m, hi=False), (t, 1)),
+                                 np.tile(pp_table(w, m, hi=True), (t, 1))])
+        out = self._lut(batch, tables)
+        return out[:t], out[t:]
+
+    def mul_digit(self, a: RadixCiphertext, digit_ct: jax.Array) -> RadixCiphertext:
+        """Multiply by ONE encrypted digit (< base): a row of the schoolbook
+        product.  Both partial-product halves run as a single 2D batch."""
+        spec = a.spec
+        base = spec.base
+        comb = lwe.add(lwe.scalar_mul(a.digits, base),
+                       jnp.broadcast_to(digit_ct, a.digits.shape))
+        lo, hi = self._pp_batch(comb, spec)
+        s = lo.at[1:].add(hi[:-1])
+        return self.propagate(RadixCiphertext(spec, s),
+                              max_val=2 * base - 3)
+
+    def mul(self, a: RadixCiphertext, b: RadixCiphertext) -> RadixCiphertext:
+        """Schoolbook product mod 2^bits.  All D*(D+1) partial-product LUTs
+        fire as ONE batch; column sums then compress through batched
+        carry-save rounds sized to the carry headroom."""
+        assert a.spec == b.spec
+        spec = a.spec
+        d, base = spec.n_digits, spec.base
+        w, m = self.params.width, spec.msg_bits
+        window = (1 << w) - 1
+
+        pairs = [(i, j) for i in range(d) for j in range(d - i)]
+        ii = np.array([i for i, _ in pairs])
+        jj = np.array([j for _, j in pairs])
+        comb = lwe.add(lwe.scalar_mul(a.digits[ii], base), b.digits[jj])
+        lo, hi = self._pp_batch(comb, spec)
+
+        # columns of (ciphertext, max plaintext value) terms
+        cols: list = [[] for _ in range(d)]
+        for k, (i, j) in enumerate(pairs):
+            cols[i + j].append((lo[k], base - 1))
+            if i + j + 1 < d:
+                cols[i + j + 1].append((hi[k], max(base - 2, 0)))
+        # carry-save compression: per round, greedily group terms whose
+        # plaintext sum fits the 2^width window, then extract (msg, carry)
+        # for every group in one batch.
+        guard = 0
+        while any(len(c) > 1 for c in cols):
+            guard += 1
+            assert guard <= 8 * d, "carry-save reduction failed to converge"
+            groups = []          # (col, [cts], group_max)
+            for ci in range(d):
+                col = cols[ci]
+                if len(col) < 2:
+                    continue
+                # smallest-first: any two terms fit (2*(base-1) <= window)
+                col.sort(key=lambda tm: tm[1])
+                taken, mx = [], 0
+                while col and mx + col[0][1] <= window:
+                    ct, v = col.pop(0)
+                    taken.append(ct)
+                    mx += v
+                groups.append((ci, taken, mx))
+            batch = jnp.stack([sum_cts(g[1]) for g in groups] * 2)
+            n = len(groups)
+            tables = np.concatenate([np.tile(msg_table(w, m), (n, 1)),
+                                     np.tile(carry_table(w, m), (n, 1))])
+            ext = self._lut(batch, tables)
+            for gi, (ci, _, mx) in enumerate(groups):
+                cols[ci].append((ext[gi], base - 1))
+                if ci + 1 < d:
+                    cols[ci + 1].append((ext[n + gi], mx >> m))
+        digits = jnp.stack([c[0][0] for c in cols])
+        res_max = max(v for c in cols for _, v in c)
+        # with width == 2*msg_bits every surviving term is already < base
+        # (carries bound by window >> msg_bits): the product is reduced and
+        # a final propagation would only burn PBS rounds
+        if res_max < base:
+            return RadixCiphertext(spec, digits)
+        return self.propagate(RadixCiphertext(spec, digits), max_val=res_max)
+
+    # -- predicates -----------------------------------------------------------
+    def compare(self, a: RadixCiphertext, b: RadixCiphertext) -> jax.Array:
+        """Encrypted three-way compare: one ciphertext holding
+        0 (a == b), 1 (a < b) or 2 (a > b).  Per-digit verdicts in one
+        batch, then a log-depth lexicographic tree reduce."""
+        assert a.spec == b.spec
+        spec = a.spec
+        w, m = self.params.width, spec.msg_bits
+        assert w >= 4, "compare needs width >= 4 (bivariate verdict combine)"
+        comb = lwe.add(lwe.scalar_mul(a.digits, spec.base), b.digits)
+        cur = self._lut(comb, np.tile(cmp_digit_table(w, m),
+                                      (spec.n_digits, 1)))
+        while cur.shape[0] > 1:
+            n = int(cur.shape[0])
+            lo, hi = cur[0:n - 1:2], cur[1:n:2]
+            comb = lwe.add(lwe.scalar_mul(hi, 4), lo)
+            out = self._lut(comb, np.tile(cmp_combine_table(w),
+                                          (comb.shape[0], 1)))
+            if n % 2:
+                out = jnp.concatenate([out, cur[n - 1:]], axis=0)
+            cur = out
+        return cur[0]
+
+    def relu_clamp(self, a: RadixCiphertext) -> RadixCiphertext:
+        """max(a, 0) for a interpreted as a two's-complement signed
+        integer: one sign PBS on the top digit, then one batched masking
+        round over all digits."""
+        spec = a.spec
+        w, m = self.params.width, spec.msg_bits
+        sign = self._lut(a.digits[-1:], sign_table(w, m)[None])[0]
+        comb = lwe.add(a.digits,
+                       jnp.broadcast_to(lwe.scalar_mul(sign, spec.base),
+                                        a.digits.shape))
+        out = self._lut(comb, np.tile(mask_table(w, m), (spec.n_digits, 1)))
+        return RadixCiphertext(spec, out)
+
+
+def sum_cts(cts: list) -> jax.Array:
+    """Linear sum of LWE ciphertexts (LPU work, no PBS)."""
+    acc = cts[0]
+    for c in cts[1:]:
+        acc = lwe.add(acc, c)
+    return acc

@@ -51,6 +51,10 @@ _OP_RE = re.compile(
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*->.*{\s*$")
 _CALL_REF_ONE = re.compile(r"(?:body|condition|calls|to_apply)=%?([\w.\-]+)")
 _CALL_REF_LIST = re.compile(r"branch_computations=\{([^}]*)\}")
+# one operand: optional inline type signature (newer XLA prints operands
+# typed: `dot(f32[512,1024]{1,0} %call.1, ...)`), then the %name.
+_OPND_RE = re.compile(
+    r"(?:([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+)?%([\w.\-]+)")
 
 
 def _call_refs(text: str):
@@ -142,38 +146,43 @@ def _param_shapes(comp: Computation) -> dict:
     return comp.defs
 
 
+def _operands(op: Op, comp: Computation) -> list:
+    """(sig, name) per operand; sig comes inline when the HLO prints typed
+    operands (newer XLA), else from the defining op in this computation.
+    Dumps that omit the '%' sigil entirely fall back to comma splitting."""
+    args = op.rest.split(")")[0]
+    out = []
+    for sig, name in _OPND_RE.findall(args):
+        out.append((sig or comp.defs.get(name, ""), name))
+    if not out:
+        for a in args.split(","):
+            a = a.strip()
+            if a:
+                out.append((comp.defs.get(a, ""), a))
+    return out
+
+
 def _dot_flops(op: Op, comp: Computation) -> float:
     shapes = _shapes_in(op.sig)
     if not shapes:
         return 0.0
     dt, rdims, rn = shapes[0]
     m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
-    # operand list: first tokens "%a, %b" before first ')'
-    args = op.rest.split(")")[0]
-    arg_names = [a.strip().lstrip("%") for a in args.split(",") if a.strip()]
+    opnds = _operands(op, comp)
     contract = 1
-    if m and arg_names:
-        lhs_sig = comp.defs.get(arg_names[0])
-        if lhs_sig:
-            lsh = _shapes_in(lhs_sig)
-            if lsh:
-                _, ldims, _ = lsh[0]
-                for d in m.group(1).split(","):
-                    if d and int(d) < len(ldims):
-                        contract *= ldims[int(d)]
+    if m and opnds:
+        lsh = _shapes_in(opnds[0][0])
+        if lsh:
+            _, ldims, _ = lsh[0]
+            for d in m.group(1).split(","):
+                if d and int(d) < len(ldims):
+                    contract *= ldims[int(d)]
     mult = 8 if dt in ("c64", "c128") else 2
     return float(mult * rn * contract)
 
 
 def _operand_bytes(op: Op, comp: Computation) -> list:
-    out = []
-    args = op.rest.split(")")[0]
-    for a in args.split(","):
-        a = a.strip().lstrip("%")
-        sig = comp.defs.get(a)
-        if sig:
-            out.append(_sig_bytes(sig))
-    return out
+    return [_sig_bytes(sig) for sig, _ in _operands(op, comp) if sig]
 
 
 def _op_bytes(op: Op, comp: Computation, *, dus: bool = False) -> int:

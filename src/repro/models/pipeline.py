@@ -27,17 +27,18 @@ F32 = jnp.float32
 
 
 def pipeline_apply(stage_fn: Callable, params_stacked, x_micro, *,
-                   axis_name: str = "pod"):
+                   n_stages: int, axis_name: str = "pod"):
     """Run microbatches through pipeline stages laid over `axis_name`.
 
     stage_fn(stage_params, x) -> x           (one stage's layers)
     params_stacked: pytree with leading stage axis, sharded over pod.
     x_micro: (n_micro, B_micro, S, d) — all microbatches, replicated.
+    n_stages: static size of the pod axis (the schedule length and the
+    ppermute ring need it at trace time).
 
     Returns (n_micro, B_micro, S, d) outputs as produced by the LAST
     stage (other stages contribute zeros; caller psums or selects).
     """
-    n_stages = jax.lax.axis_size(axis_name)
     stage = jax.lax.axis_index(axis_name)
     n_micro = x_micro.shape[0]
     ticks = n_micro + n_stages - 1
@@ -87,6 +88,7 @@ def make_pipelined_fwd(stage_fn: Callable, mesh: Mesh, *, n_micro: int,
         xm = x.reshape(n_micro, B // n_micro, *x.shape[1:])
 
         inner = functools.partial(pipeline_apply, stage_fn,
+                                  n_stages=mesh.shape[axis_name],
                                   axis_name=axis_name)
         specs_p = jax.tree.map(lambda _: P(axis_name), params_stacked)
         y = shard_map(

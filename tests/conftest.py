@@ -1,0 +1,39 @@
+"""Shared fixtures: session-scoped key material.
+
+TFHE keygen (bootstrapping + key-switching keys) costs several seconds
+per parameter set; every test module creating its own context put the
+suite's wall clock mostly into repeated keygen.  One context per
+parameter set per session is safe — contexts are immutable key bundles
+and every test derives its own encryption randomness.
+"""
+import jax
+import pytest
+
+from repro.core.engine import TaurusEngine
+from repro.core.params import TEST_PARAMS, TEST_PARAMS_4BIT, TEST_PARAMS_6BIT
+from repro.core.pbs import TFHEContext
+
+
+@pytest.fixture(scope="session")
+def ctx_2bit():
+    return TFHEContext.create(jax.random.key(40), TEST_PARAMS)
+
+
+@pytest.fixture(scope="session")
+def ctx_4bit():
+    return TFHEContext.create(jax.random.key(41), TEST_PARAMS_4BIT)
+
+
+@pytest.fixture(scope="session")
+def ctx_6bit():
+    return TFHEContext.create(jax.random.PRNGKey(42), TEST_PARAMS_6BIT)
+
+
+@pytest.fixture(scope="session")
+def engine_2bit(ctx_2bit):
+    return TaurusEngine.from_context(ctx_2bit)
+
+
+@pytest.fixture(scope="session")
+def engine_4bit(ctx_4bit):
+    return TaurusEngine.from_context(ctx_4bit)

@@ -48,6 +48,7 @@ def test_forward_and_loss(mod_name):
     assert bool(jnp.isfinite(loss))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("mod_name", ARCH_MODULES)
 def test_train_step_reduces_loss(mod_name):
     cfg = _reduced(mod_name)
@@ -69,6 +70,7 @@ def test_train_step_reduces_loss(mod_name):
     assert float(l1) < float(l0)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("mod_name", ARCH_MODULES)
 def test_decode_matches_prefill(mod_name):
     """Greedy decode-step logits must match the teacher-forced forward."""

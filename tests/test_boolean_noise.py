@@ -11,13 +11,12 @@ from repro.core import noise
 from repro.core.boolean import BooleanContext
 from repro.core.params import (PAPER_PARAMS, TEST_PARAMS, TEST_PARAMS_4BIT,
                                TEST_PARAMS_6BIT)
-from repro.core.pbs import TFHEContext
 
 
-@pytest.fixture(scope="module")
-def bctx():
-    return BooleanContext(TFHEContext.create(jax.random.PRNGKey(5),
-                                             TEST_PARAMS))
+@pytest.fixture()
+def bctx(ctx_2bit):
+    # gate layer over the session-scoped TEST_PARAMS key material
+    return BooleanContext(ctx_2bit)
 
 
 def _enc_bits(bctx, key, bits):

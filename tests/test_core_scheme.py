@@ -134,10 +134,8 @@ def test_keyswitch():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(msgs))
 
 
-@pytest.mark.parametrize("params", [TEST_PARAMS, TEST_PARAMS_K2], ids=lambda p: p.name)
-def test_pbs_identity_all_messages(params):
-    ctx = TFHEContext.create(jax.random.key(30), params)
-    mod = params.plaintext_modulus
+def _pbs_identity(ctx):
+    mod = ctx.params.plaintext_modulus
     table = list(range(mod))
     for m in range(mod):
         ct = ctx.encrypt(jax.random.key(100 + m), m)
@@ -145,9 +143,18 @@ def test_pbs_identity_all_messages(params):
         assert int(ctx.decrypt(out)) == m, f"PBS identity failed at m={m}"
 
 
-def test_pbs_nontrivial_lut_and_noise_refresh():
-    params = TEST_PARAMS_4BIT
-    ctx = TFHEContext.create(jax.random.key(31), params)
+def test_pbs_identity_all_messages(ctx_2bit):
+    _pbs_identity(ctx_2bit)
+
+
+def test_pbs_identity_all_messages_k2():
+    # k=2 stays locally created: tiny params, no session fixture for it
+    _pbs_identity(TFHEContext.create(jax.random.key(30), TEST_PARAMS_K2))
+
+
+def test_pbs_nontrivial_lut_and_noise_refresh(ctx_4bit):
+    ctx = ctx_4bit
+    params = ctx.params
     mod = params.plaintext_modulus
     relu_shift = [max(0, m - 8) for m in range(mod)]  # ReLU(m-8) as in Fig. 2
     for m in [0, 3, 7, 8, 9, 15]:
@@ -159,12 +166,42 @@ def test_pbs_nontrivial_lut_and_noise_refresh():
         assert n < 1.0 / (2 ** (params.width + 2))
 
 
-def test_pbs_chain_depth():
+def test_pbs_chain_depth(ctx_2bit):
     """Repeated PBS keeps working: noise does not accumulate across ops."""
-    params = TEST_PARAMS
-    ctx = TFHEContext.create(jax.random.key(32), params)
+    ctx = ctx_2bit
+    params = ctx.params
     inc = [(m + 1) % params.plaintext_modulus for m in range(params.plaintext_modulus)]
     ct = ctx.encrypt(jax.random.key(33), 0)
     for i in range(4):
         ct = ctx.lut(ct, inc)
         assert int(ctx.decrypt(ct)) == (i + 1) % params.plaintext_modulus
+
+
+def test_decompose_recompose_exact_identity():
+    """When the gadget covers the full 64-bit word (base_log*level == 64),
+    recompose o decompose is the IDENTITY, not just an approximation."""
+    v = jax.random.bits(jax.random.key(77), (512,), dtype=U64)
+    for bl, lv in [(4, 16), (8, 8), (16, 4), (32, 2)]:
+        d = dec.decompose(v, bl, lv)
+        r = dec.recompose(d, bl, lv)
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(v))
+
+
+def test_rotate_identity_and_extremes():
+    """glwe.rotate edge cases: r=0 is the identity; r=2N-1 multiplies by
+    X^{-1} (coefficients shift down, the wrapped one negated); r=N is
+    global negation.  Checked on a full (k+1, N) GLWE layout."""
+    N = 32
+    rng = np.random.default_rng(3)
+    ct = jnp.asarray(rng.integers(0, 1 << 64, (2, N), dtype=np.uint64))
+    np.testing.assert_array_equal(
+        np.asarray(glwe.rotate(ct, jnp.asarray(0), N)), np.asarray(ct))
+    got = np.asarray(glwe.rotate(ct, jnp.asarray(2 * N - 1), N))
+    want = np.empty_like(np.asarray(ct))
+    want[:, : N - 1] = np.asarray(ct)[:, 1:]            # c_{j+1} -> slot j
+    want[:, N - 1] = (-np.asarray(ct)[:, :1].astype(np.int64)
+                      ).astype(np.uint64).ravel()       # -c_0 wraps to top
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(
+        np.asarray(glwe.rotate(ct, jnp.asarray(N), N)),
+        (-np.asarray(ct).astype(np.int64)).astype(np.uint64))

@@ -1,23 +1,17 @@
-"""Batched engine correctness: batched == unbatched == decrypt oracle."""
+"""Batched engine correctness: batched == unbatched == decrypt oracle.
+
+Key material comes from the session-scoped fixtures in conftest.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import glwe
-from repro.core.engine import TaurusEngine
-from repro.core.params import TEST_PARAMS
-from repro.core.pbs import TFHEContext
 
 U64 = jnp.uint64
 
 
-def make_ctx():
-    return TFHEContext.create(jax.random.key(40), TEST_PARAMS)
-
-
-def test_batched_pbs_matches_decrypt_oracle():
-    ctx = make_ctx()
-    eng = TaurusEngine.from_context(ctx)
+def test_batched_pbs_matches_decrypt_oracle(ctx_2bit, engine_2bit):
+    ctx, eng = ctx_2bit, engine_2bit
     mod = ctx.params.plaintext_modulus
     msgs = np.array([0, 1, 2, 3, 3, 2, 1], dtype=np.uint64)  # odd B: pad path
     cts = jax.vmap(lambda k, m: ctx.encrypt(k, m))(
@@ -32,10 +26,9 @@ def test_batched_pbs_matches_decrypt_oracle():
     np.testing.assert_array_equal(got, want)
 
 
-def test_batched_equals_xpu_unbatched_semantics():
+def test_batched_equals_xpu_unbatched_semantics(ctx_2bit, engine_2bit):
     """Round-robin batching must not change results vs the XPU-style loop."""
-    ctx = make_ctx()
-    eng = TaurusEngine.from_context(ctx)
+    ctx, eng = ctx_2bit, engine_2bit
     mod = ctx.params.plaintext_modulus
     msgs = jnp.asarray([3, 0, 2, 1], dtype=U64)
     cts = jax.vmap(lambda k, m: ctx.encrypt(k, m))(
@@ -56,12 +49,28 @@ def test_batched_equals_xpu_unbatched_semantics():
     )
 
 
-def test_linear_ops_roundtrip():
-    ctx = make_ctx()
-    eng = TaurusEngine.from_context(ctx)
+def test_linear_ops_roundtrip(ctx_2bit, engine_2bit):
+    ctx, eng = ctx_2bit, engine_2bit
     c1 = ctx.encrypt(jax.random.key(43), 1)
     c2 = ctx.encrypt(jax.random.key(44), 2)
     assert int(ctx.decrypt(eng.add(c1, c2))) == 3
     assert int(ctx.decrypt(eng.scalar_mul(c1, 3))) == 3
     assert int(ctx.decrypt(eng.add_plain(c2, 1))) == 3
     assert int(ctx.decrypt(eng.trivial(2))) == 2
+
+
+def test_lut_batch_tables_heterogeneous(ctx_2bit, engine_2bit):
+    """Integer-table entry point: DIFFERENT tables per ciphertext in one
+    batch (what the radix carry rounds dispatch)."""
+    ctx, eng = ctx_2bit, engine_2bit
+    mod = ctx.params.plaintext_modulus
+    msgs = np.array([1, 3, 0, 2], dtype=np.uint64)
+    cts = jax.vmap(lambda k, m: ctx.encrypt(k, m))(
+        jax.random.split(jax.random.key(45), len(msgs)), jnp.asarray(msgs)
+    )
+    tables = np.stack([np.roll(np.arange(mod, dtype=np.uint64), i)
+                       for i in range(len(msgs))])
+    out = eng.lut_batch_tables(cts, tables)
+    got = np.asarray(jax.vmap(ctx.decrypt)(out))
+    want = np.array([tables[i][int(m)] for i, m in enumerate(msgs)])
+    np.testing.assert_array_equal(got, want)

@@ -8,6 +8,8 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 SCRIPT = textwrap.dedent(
     """
     import os
@@ -42,6 +44,7 @@ SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.slow
 def test_engine_on_4_device_mesh():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(

@@ -5,16 +5,15 @@ import pytest
 
 import jax
 
-from repro.core.params import TEST_PARAMS_6BIT
-from repro.core.pbs import TFHEContext
 from repro.compiler.ir import trace
 from repro.fhe_ml import lower, executor
 from repro.fhe_ml.quantize import QuantSpec, calibrate, quantize_affine, dequantize
 
 
-@pytest.fixture(scope="module")
-def ctx():
-    return TFHEContext.create(jax.random.PRNGKey(42), TEST_PARAMS_6BIT)
+@pytest.fixture()
+def ctx(ctx_6bit):
+    # session-scoped keygen (tests/conftest.py); params stay TEST_PARAMS_6BIT
+    return ctx_6bit
 
 
 def _run_both(ctx, g, inputs, **kw):
@@ -70,6 +69,7 @@ def test_quantize_roundtrip():
     assert float(err.max()) <= spec.scale * 0.51
 
 
+@pytest.mark.slow
 def test_encrypted_mlp_matches_oracle(ctx):
     rng = np.random.default_rng(0)
     d_in, d_h = 4, 6
@@ -89,6 +89,7 @@ def test_encrypted_mlp_matches_oracle(ctx):
     assert ex.stats["pbs"] == d_h + d_in
 
 
+@pytest.mark.slow
 def test_encrypted_gpt2_block_matches_oracle(ctx):
     """The paper's flagship demo at laptop scale: a quantized single-head
     GPT-2-style block (ct*ct attention, GELU MLP) runs under real TFHE

@@ -1,0 +1,201 @@
+"""Radix wide-integer subsystem: encrypted 8/16/32-bit arithmetic must
+match the plaintext oracle, with every carry round dispatched through
+`TaurusEngine.lut_batch` at batch sizes >= the digit count."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.integer import IntegerContext, RadixSpec
+from repro.core.params import TEST_PARAMS, TEST_PARAMS_4BIT
+
+
+@pytest.fixture()
+def ic2(ctx_2bit, engine_2bit):
+    return IntegerContext.create(ctx_2bit, engine_2bit)
+
+
+@pytest.fixture()
+def ic4(ctx_4bit, engine_4bit):
+    return IntegerContext.create(ctx_4bit, engine_4bit)
+
+
+# --- digit layout -----------------------------------------------------------
+
+def test_spec_layout():
+    s = RadixSpec.create(TEST_PARAMS_4BIT, 16)       # width 4 -> 2 msg bits
+    assert (s.msg_bits, s.base, s.n_digits) == (2, 4, 8)
+    s2 = RadixSpec.create(TEST_PARAMS, 32)           # width 2 -> 1 msg bit
+    assert (s2.msg_bits, s2.base, s2.n_digits) == (1, 2, 32)
+
+
+def test_spec_digit_roundtrip():
+    s = RadixSpec.create(TEST_PARAMS_4BIT, 16)
+    for v in (0, 1, 0xBEEF, 0xFFFF, 12345):
+        assert s.from_digits(s.to_digits(v)) == v
+    # unpropagated carries still recombine to the represented integer
+    assert s.from_digits([5, 3, 0, 0, 0, 0, 0, 0]) == 5 + 3 * 4
+
+
+@pytest.mark.parametrize("bits", [8, 16, 32])
+def test_encrypt_decrypt_roundtrip(ic4, bits):
+    rng = np.random.default_rng(bits)
+    for i in range(3):
+        v = int(rng.integers(0, 1 << bits))
+        ct = ic4.encrypt(jax.random.key(100 * bits + i), v, bits)
+        assert ic4.decrypt(ct) == v
+        assert ct.digits.shape[0] == bits // ct.spec.msg_bits
+
+
+def test_encrypt_decrypt_roundtrip_base2(ic2):
+    v = 0xDEADBEEF
+    ct = ic2.encrypt(jax.random.key(0), v, 32)
+    assert ic2.decrypt(ct) == v and ct.digits.shape[0] == 32
+
+
+# --- the acceptance pair: 16-bit add/mul vs the plaintext oracle ------------
+
+def _assert_batched(ic, n_digits):
+    """Every PBS round went through TaurusEngine.lut_batch with at least
+    one ciphertext per digit in the dispatched batch."""
+    assert ic.stats["lut_batches"] > 0
+    assert min(ic.stats["dispatch_sizes"]) >= n_digits
+
+
+def test_add16_matches_oracle(ic4, monkeypatch):
+    rng = np.random.default_rng(7)
+    eng = ic4.engine
+    calls = []
+    real = type(eng).lut_batch
+
+    def spy(self, cts, polys):
+        calls.append(int(cts.shape[0]))
+        return real(self, cts, polys)
+    monkeypatch.setattr(type(eng), "lut_batch", spy)
+
+    for i in range(2):
+        a, b = int(rng.integers(0, 1 << 16)), int(rng.integers(0, 1 << 16))
+        ca = ic4.encrypt(jax.random.key(2 * i), a, 16)
+        cb = ic4.encrypt(jax.random.key(2 * i + 1), b, 16)
+        ic4.reset_stats()
+        calls.clear()
+        s = ic4.add(ca, cb)
+        assert ic4.decrypt(s) == (a + b) % 2 ** 16
+        _assert_batched(ic4, ca.spec.n_digits)
+        # the rounds really went through the engine's batched PBS entry
+        assert calls == ic4.stats["dispatch_sizes"]
+        assert min(calls) >= ca.spec.n_digits
+
+
+def test_mul16_matches_oracle(ic4):
+    rng = np.random.default_rng(11)
+    a, b = int(rng.integers(0, 1 << 16)), int(rng.integers(0, 1 << 16))
+    ca = ic4.encrypt(jax.random.key(50), a, 16)
+    cb = ic4.encrypt(jax.random.key(51), b, 16)
+    ic4.reset_stats()
+    m = ic4.mul(ca, cb)
+    assert ic4.decrypt(m) == (a * b) % 2 ** 16
+    _assert_batched(ic4, ca.spec.n_digits)
+    # the partial-product wave batches every pairwise LUT at once
+    d = ca.spec.n_digits
+    assert max(ic4.stats["batch_sizes"]) >= d * (d + 1)
+
+
+def test_add8_ripple_base2(ic2):
+    """Width-2 params take the ripple strategy (no room for the bivariate
+    status combine): still one lut_batch of 2D per round."""
+    a, b = 173, 209
+    ca = ic2.encrypt(jax.random.key(60), a, 8)
+    cb = ic2.encrypt(jax.random.key(61), b, 8)
+    ic2.reset_stats()
+    s = ic2.add(ca, cb)
+    assert ic2.decrypt(s) == (a + b) % 256
+    d = ca.spec.n_digits
+    assert ic2.stats["lut_batches"] == d                 # D ripple rounds
+    assert all(bs == 2 * d for bs in ic2.stats["batch_sizes"])
+
+
+def test_mul8_base2_carry_save(ic2):
+    """Base-2 digits (width 2): carry-save compression + ripple rounds."""
+    a, b = 171, 206
+    ca = ic2.encrypt(jax.random.key(72), a, 8)
+    cb = ic2.encrypt(jax.random.key(73), b, 8)
+    assert ic2.decrypt(ic2.mul(ca, cb)) == (a * b) % 256
+
+
+def test_mul8_matches_oracle_random(ic4):
+    rng = np.random.default_rng(13)
+    for i in range(2):
+        a, b = int(rng.integers(0, 256)), int(rng.integers(0, 256))
+        ca = ic4.encrypt(jax.random.key(70 + 2 * i), a, 8)
+        cb = ic4.encrypt(jax.random.key(71 + 2 * i), b, 8)
+        assert ic4.decrypt(ic4.mul(ca, cb)) == (a * b) % 256
+
+
+# --- carry behaviour at digit boundaries ------------------------------------
+
+def test_carry_chain_full_wraparound(ic4):
+    """0xFFFF + 1 = 0 mod 2^16: the longest possible carry chain."""
+    ca = ic4.encrypt(jax.random.key(80), 0xFFFF, 16)
+    cb = ic4.encrypt(jax.random.key(81), 1, 16)
+    s = ic4.add(ca, cb)
+    assert ic4.decrypt(s) == 0
+    assert np.all(ic4.decrypt_digits(s) == 0)            # digits reduced
+
+def test_carry_stops_mid_chain(ic4):
+    """0x00FF + 1 = 0x0100: carries cross exactly the low digits."""
+    ca = ic4.encrypt(jax.random.key(82), 0x00FF, 16)
+    cb = ic4.encrypt(jax.random.key(83), 1, 16)
+    assert ic4.decrypt(ic4.add(ca, cb)) == 0x0100
+
+
+def test_sub_wraps_two_complement(ic4):
+    a, b = 0x1234, 0xBEEF
+    ca = ic4.encrypt(jax.random.key(84), a, 16)
+    cb = ic4.encrypt(jax.random.key(85), b, 16)
+    assert ic4.decrypt(ic4.sub(ca, cb)) == (a - b) % 2 ** 16
+    assert ic4.decrypt(ic4.sub(cb, ca)) == (b - a) % 2 ** 16
+
+
+def test_mul_digit_row(ic4):
+    a = 0x0BED
+    ca = ic4.encrypt(jax.random.key(86), a, 16)
+    for dval in (0, 1, 3):
+        dig = ic4.encrypt(jax.random.key(87 + dval), dval, 16)
+        got = ic4.mul_digit(ca, dig.digits[0])
+        assert ic4.decrypt(got) == (a * dval) % 2 ** 16
+
+
+# --- predicates -------------------------------------------------------------
+
+def test_compare_three_way(ic4):
+    pairs = [(100, 100, 0), (99, 100, 1), (0xBEEF, 0x1234, 2),
+             (0x1234, 0x1234, 0)]
+    for a, b, want in pairs:
+        ca = ic4.encrypt(jax.random.key(a % 97), a, 16)
+        cb = ic4.encrypt(jax.random.key(b % 89 + 200), b, 16)
+        assert int(ic4.ctx.decrypt(ic4.compare(ca, cb))) == want, (a, b)
+
+
+def test_relu_clamp_signed(ic4):
+    for v, want in ((1234, 1234), (-1234, 0), (0, 0), (-1, 0),
+                    (0x7FFF, 0x7FFF)):
+        ct = ic4.encrypt(jax.random.key(v % 251 + 300), v, 16)
+        assert ic4.decrypt(ic4.relu_clamp(ct)) == want, v
+
+
+# --- noise budget ------------------------------------------------------------
+
+def test_per_digit_noise_budget(ic4):
+    """After add+mul chains every digit's residual noise sits well below
+    half a plaintext slot (PBS refreshed it)."""
+    a, b = 0xBEEF, 0x1234
+    ca = ic4.encrypt(jax.random.key(90), a, 16)
+    cb = ic4.encrypt(jax.random.key(91), b, 16)
+    s = ic4.add(ca, cb)
+    noise = ic4.digit_noise(s, (a + b) % 2 ** 16)
+    budget = 1.0 / 2 ** (ic4.params.width + 2)
+    assert np.max(np.abs(noise)) < budget
+    m = ic4.mul(ca, cb)
+    noise_m = ic4.digit_noise(m, (a * b) % 2 ** 16)
+    assert np.max(np.abs(noise_m)) < budget

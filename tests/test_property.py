@@ -1,6 +1,12 @@
 """Property-based tests (hypothesis) on the scheme's algebraic invariants
 and the compiler's dedup correctness."""
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="dev-only dependency (see requirements-dev.txt); skipping "
+           "property-based tests")
 from hypothesis import given, settings, strategies as st
 
 import jax

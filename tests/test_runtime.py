@@ -103,6 +103,7 @@ def test_data_pipeline_deterministic_and_resumable():
     np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
 
 
+@pytest.mark.slow
 def test_train_restart_after_failure():
     """Driver-level fault tolerance: injected failure -> checkpoint
     restore -> run completes."""
