@@ -3,7 +3,9 @@
     PYTHONPATH=src python -m benchmarks.run [--only fig5,table2,...]
 
 Writes benchmarks/results.json and prints each table with paper
-comparisons inline.
+comparisons inline.  Serving rows additionally land in
+benchmarks/BENCH_serve.json (requests/sec, fused-batch occupancy, dedup
+hit-rate) so the serving perf trajectory is tracked machine-readably.
 """
 from __future__ import annotations
 
@@ -14,7 +16,7 @@ import sys
 import traceback
 
 ALL = ["fig5", "table2", "table4", "fig13", "fig15", "dedup", "engine",
-       "radix"]
+       "radix", "serve"]
 
 
 def main(argv=None):
@@ -25,11 +27,13 @@ def main(argv=None):
 
     from benchmarks import (fig5_addition, table2_workloads, table4_xpu,
                             fig13_bandwidth, fig15_utilization, dedup_stats,
-                            engine_wallclock, radix_throughput)
+                            engine_wallclock, radix_throughput,
+                            serve_throughput)
     mods = {"fig5": fig5_addition, "table2": table2_workloads,
             "table4": table4_xpu, "fig13": fig13_bandwidth,
             "fig15": fig15_utilization, "dedup": dedup_stats,
-            "engine": engine_wallclock, "radix": radix_throughput}
+            "engine": engine_wallclock, "radix": radix_throughput,
+            "serve": serve_throughput}
 
     results, failed = [], []
     for name in which:
@@ -41,6 +45,9 @@ def main(argv=None):
     path = os.path.join(os.path.dirname(__file__), "results.json")
     with open(path, "w") as f:
         json.dump(results, f, indent=1, default=float)
+    if any(r.get("bench") == "serve" for r in results):
+        spath = serve_throughput.write_bench_json(results)
+        print(f"[benchmarks] serving rows -> {spath}")
     print(f"\n[benchmarks] {len(results)} rows -> {path}; "
           f"{len(failed)} failed {failed}")
     return 1 if failed else 0

@@ -1,0 +1,143 @@
+"""Serving throughput: cross-request fused PBS rounds vs per-request
+sequential execution.
+
+Eight concurrent clients each submit an 8-bit encrypted radix-add
+program (two of them are an identical retry pair — the online-dedup
+case).  Baseline: the same programs executed sequentially, one request
+at a time, through the same IR interpreter and engine.  Fused: the
+`ServeRuntime` round scheduler, which barriers the 8 requests' carry
+rounds into single `lut_batch` dispatches.
+
+The structural win: one request's carry rounds cover only 4-8
+ciphertexts, far below the engine's quantized batch floor
+(`integer._pad_batch`), so a sequential server bootstraps 2-4x padding
+per round and pays the per-dispatch fixed cost 8x — while the fused
+rounds fill the batch with REAL work from the whole fleet, stream the
+BSK once per round for everyone, and bootstrap duplicate rows (the
+retry pair) exactly once.
+
+Acceptance (ISSUE 2): fused >= 2x requests/sec, dedup hit-rate > 0,
+recorded machine-readably in benchmarks/BENCH_serve.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+N_CLIENTS = 8
+BITS = 8
+
+
+def write_bench_json(rows: list, path: str | None = None) -> str:
+    """Write the serve rows to benchmarks/BENCH_serve.json."""
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump([r for r in rows if r.get("bench") == "serve"], f,
+                  indent=1, default=float)
+    return path
+
+
+def run() -> list:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.engine import TaurusEngine
+    from repro.core.integer import IntegerContext
+    from repro.core.params import TEST_PARAMS_4BIT
+    from repro.core.pbs import TFHEContext
+    from repro.serve import (IrInterpreter, ServeRuntime,
+                             decrypt_radix_output, encrypt_request_inputs,
+                             radix_binop_program)
+
+    params = TEST_PARAMS_4BIT
+    ctx = TFHEContext.create(jax.random.PRNGKey(0), params)
+    engine = TaurusEngine.from_context(ctx)
+    ic = IntegerContext.create(ctx, engine)
+    msg_bits = ic.spec(BITS).msg_bits
+    g = radix_binop_program("radix_add", BITS, msg_bits)
+
+    rng = np.random.default_rng(7)
+    jobs = []
+    for i in range(N_CLIENTS - 1):
+        a, b = int(rng.integers(0, 1 << BITS)), int(rng.integers(0, 1 << BITS))
+        enc = encrypt_request_inputs(ic, jax.random.key(100 + i), [a, b], BITS)
+        jobs.append((f"client-{i}", enc, (a + b) % (1 << BITS)))
+    # the last client is a retry of client-0: identical ciphertexts — the
+    # cross-request dedup case (a replayed/retried query)
+    jobs.append((f"client-{N_CLIENTS - 1}", jobs[0][1], jobs[0][2]))
+
+    # warm the compiled pbs_batch shapes both paths will hit, so the
+    # measurement is execution, not XLA compilation
+    d = ic.spec(BITS).n_digits
+    warm_ct = jnp.tile(jobs[0][1][0][:1], (1, 1))
+    ident = np.arange(params.plaintext_modulus, dtype=np.uint64)
+    for size in (16, 2 * d * N_CLIENTS // 2, 2 * d * N_CLIENTS):
+        engine.lut_batch_tables(jnp.tile(warm_ct, (size, 1)),
+                                np.tile(ident, (size, 1)))
+
+    print("\n== Multi-tenant serving throughput "
+          f"({N_CLIENTS} radix-add clients, {BITS}-bit, "
+          f"{params.name}) ==")
+
+    # Interleave the two modes and take per-mode medians: on shared CPU
+    # the machine's effective speed drifts over minutes, and measuring
+    # the modes back-to-back once would fold that drift into the ratio.
+    reps = 3
+    interp = IrInterpreter(ctx, engine)
+    interp.run(g, jobs[0][1])                       # warm remaining shapes
+    t_seqs, t_fuseds, sched = [], [], None
+    for rep in range(reps):
+        # -- baseline: sequential per-request execution ---------------------
+        t0 = time.perf_counter()
+        seq_out = [interp.run_outputs(g, enc)[0] for _, enc, _ in jobs]
+        for out in seq_out:
+            out.block_until_ready()
+        t_seqs.append(time.perf_counter() - t0)
+
+        # -- fused: cross-request round scheduler ---------------------------
+        rt = ServeRuntime(ctx, engine, max_inflight=N_CLIENTS,
+                          start_paused=True)
+        handles = [rt.submit(g, enc, client_id=c) for c, enc, _ in jobs]
+        t0 = time.perf_counter()
+        rt.resume()
+        rt.drain()
+        t_fuseds.append(time.perf_counter() - t0)
+        sched = rt.scheduler
+        print(f"  pass {rep + 1}/{reps}: sequential {t_seqs[-1]:5.1f}s, "
+              f"fused {t_fuseds[-1]:5.1f}s")
+        for out, (_, _, want) in zip(seq_out, jobs):
+            assert decrypt_radix_output(ic, out, BITS)[0] == want
+        for h, (_, _, want) in zip(handles, jobs):
+            assert decrypt_radix_output(ic, h.outputs()[0], BITS)[0] == want
+
+    t_seq = float(np.median(t_seqs))
+    t_fused = float(np.median(t_fuseds))
+    rps_seq = len(jobs) / t_seq
+    rps_fused = len(jobs) / t_fused
+    row = {
+        "bench": "serve", "clients": len(jobs), "bits": BITS,
+        "params": params.name,
+        "requests_per_s_sequential": rps_seq,
+        "requests_per_s_fused": rps_fused,
+        "speedup": rps_fused / rps_seq,
+        "dedup_hit_rate": sched.dedup_hit_rate,
+        "fused_occupancy": sched.mean_occupancy,
+        "fused_rounds": sched.stats["fused_rounds"],
+        "logical_luts": sched.stats["logical_luts"],
+        "dispatched_luts": sched.stats["dispatched_luts"],
+    }
+    print(f"  sequential: {t_seq:6.1f}s  {rps_seq:5.2f} req/s")
+    print(f"  fused:      {t_fused:6.1f}s  {rps_fused:5.2f} req/s  "
+          f"({row['speedup']:.2f}x; target >= 2x)")
+    print(f"  fused rounds {row['fused_rounds']}, occupancy "
+          f"{row['fused_occupancy']:.0%}, dedup hit-rate "
+          f"{row['dedup_hit_rate']:.1%}")
+    return [row]
+
+
+if __name__ == "__main__":
+    rows = run()
+    path = write_bench_json(rows)
+    print(f"[serve] wrote {path}")

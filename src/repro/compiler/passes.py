@@ -69,6 +69,34 @@ def _table_key(t: np.ndarray) -> bytes:
     return np.ascontiguousarray(t).tobytes()
 
 
+def fused_round_dedup(pair_keys) -> tuple:
+    """Online (serving-time) extension of the KS/ACC dedup passes.
+
+    The static passes above dedup within ONE compiled graph.  When a
+    serving scheduler fuses the ready PBS rounds of many concurrent
+    requests into a single engine batch, the same observation applies
+    across requests: two batch rows with an identical
+    (ciphertext-digest, table-digest) pair are the SAME bootstrap —
+    key-switch, blind rotation and sample extraction included — so the
+    round dispatches it once and fans the refreshed ciphertext back out
+    (retried/replayed requests dedup to zero marginal PBS work).
+
+    pair_keys: one hashable (ct_key, table_key) per fused batch row.
+    Returns (unique_idx, inverse, hits): the row indices to dispatch,
+    the scatter map (inverse[i] indexes the dispatched results to rebuild
+    row i), and how many rows were deduplicated away.
+    """
+    first: dict = {}
+    unique_idx: list = []
+    inverse: list = []
+    for i, key in enumerate(pair_keys):
+        if key not in first:
+            first[key] = len(unique_idx)
+            unique_idx.append(i)
+        inverse.append(first[key])
+    return unique_idx, inverse, len(inverse) - len(unique_idx)
+
+
 def lower_to_physical(g: Graph, *, ks_dedup: bool = True,
                       acc_dedup: bool = True):
     """Graph -> (list[PhysOp], DedupStats).

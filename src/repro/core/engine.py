@@ -25,6 +25,28 @@ from repro.core.params import TFHEParams
 U64 = jnp.uint64
 
 
+def validate_lut_tables(cts: jax.Array, tables, params: TFHEParams):
+    """Normalize/validate per-ciphertext integer LUT tables against a
+    batch: broadcast a single (2^width,) table across the batch, reject
+    any other count mismatch (it used to slip through as a silent shape
+    mismatch inside the jitted PBS).  Shared by `TaurusEngine` and the
+    serving `FusedEngineProxy` so their validation cannot drift."""
+    tables = jnp.asarray(tables, dtype=U64)
+    mod = params.plaintext_modulus
+    if tables.ndim == 1:
+        tables = jnp.broadcast_to(tables, (cts.shape[0],) + tables.shape)
+    if tables.ndim != 2 or tables.shape[-1] != mod:
+        raise ValueError(
+            f"lut_batch_tables: tables must be (B, {mod}) or ({mod},), "
+            f"got {tuple(tables.shape)}")
+    if tables.shape[0] != cts.shape[0]:
+        raise ValueError(
+            f"lut_batch_tables: {cts.shape[0]} ciphertexts but "
+            f"{tables.shape[0]} tables — pass one table per ciphertext "
+            f"or a single shared table")
+    return tables
+
+
 @dataclasses.dataclass
 class TaurusEngine:
     params: TFHEParams
@@ -71,6 +93,10 @@ class TaurusEngine:
         Pads B up to a multiple of the cluster count.
         """
         B = cts.shape[0]
+        if lut_polys.shape[0] != B:
+            raise ValueError(
+                f"lut_batch: {B} ciphertexts but {lut_polys.shape[0]} LUT "
+                f"polynomials — counts must match per batch row")
         shards = self.n_clusters
         pad = (-B) % shards
         if pad:
@@ -92,8 +118,13 @@ class TaurusEngine:
 
     def lut_batch_tables(self, cts: jax.Array, tables) -> jax.Array:
         """lut_batch from per-ciphertext INTEGER tables (B, 2^width):
-        encodes each row as a test polynomial, then one batched PBS."""
-        return self.lut_batch(cts, glwe.make_lut_polys(tables, self.params))
+        encodes each row as a test polynomial, then one batched PBS.
+
+        A single 1-D table (2^width,) broadcasts across the whole batch;
+        any other count mismatch raises (see `validate_lut_tables`)."""
+        tables = validate_lut_tables(cts, tables, self.params)
+        return self.lut_batch(cts,
+                              glwe.make_lut_polys_cached(tables, self.params))
 
     def lut_batch_xpu(self, cts: jax.Array, lut_polys: jax.Array) -> jax.Array:
         """Morphling-XPU-style baseline: no cross-ciphertext BSK reuse."""

@@ -5,8 +5,11 @@ Z_q[X]/(X^N+1).
 """
 from __future__ import annotations
 
+import threading
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import torus, fft
 from repro.core.params import TFHEParams
@@ -102,3 +105,55 @@ def make_lut_polys(tables: jax.Array, params: TFHEParams) -> jax.Array:
     """Batched `make_lut_poly`: (B, 2^width) integer tables -> (B, N)."""
     return jax.vmap(lambda t: make_lut_poly(t, params))(
         jnp.asarray(tables, dtype=U64))
+
+
+# Process-wide test-polynomial cache, one entry per UNIQUE table row per
+# parameter set.  A PBS round's (B, 2^width) table stack is almost always
+# a tile of 2-3 distinct rows (msg/carry/status tables), and in the
+# serving runtime every concurrent request re-derives the same rows —
+# encoding each distinct row once and gathering beats re-encoding whole
+# stacks (the eager per-row encode at N >= 2048 costs more than the PBS
+# dispatch it feeds).  Bounded FIFO: table rows arrive from CLIENT
+# programs, so an adversarial stream of all-distinct tables must not pin
+# unbounded server memory (each row is an (N,) uint64, ~16KB at N=2048).
+# Lookups/eviction are lock-guarded (serving workers are concurrent); the
+# expensive encode itself runs outside the lock, so a race at worst
+# re-encodes a row.
+_ROW_POLY_CACHE: dict = {}
+_ROW_POLY_CACHE_MAX = 4096
+_ROW_POLY_LOCK = threading.Lock()
+
+
+def _cache_put(key, poly) -> None:
+    with _ROW_POLY_LOCK:
+        while len(_ROW_POLY_CACHE) >= _ROW_POLY_CACHE_MAX:
+            _ROW_POLY_CACHE.pop(next(iter(_ROW_POLY_CACHE)), None)
+        _ROW_POLY_CACHE[key] = poly
+
+
+def make_lut_polys_cached(tables, params: TFHEParams) -> jax.Array:
+    """`make_lut_polys` through the process-wide per-row cache: only rows
+    never seen under `params` are encoded; the stack is gathered from
+    cached (N,) polynomials.  Safe under concurrent callers (a race at
+    worst re-encodes a row)."""
+    tables = np.ascontiguousarray(np.asarray(tables, dtype=np.uint64))
+    row_keys = [r.tobytes() for r in tables]
+    order: dict = {}
+    for i, k in enumerate(row_keys):
+        if k not in order:
+            order[k] = i
+    # snapshot hits locally (under the lock) so concurrent eviction can't
+    # race the gather below
+    with _ROW_POLY_LOCK:
+        local = {k: _ROW_POLY_CACHE[(params, k)] for k in order
+                 if (params, k) in _ROW_POLY_CACHE}
+    missing = [k for k in order if k not in local]
+    if missing:
+        polys = make_lut_polys(
+            np.stack([tables[order[k]] for k in missing]), params)
+        for j, k in enumerate(missing):
+            local[k] = polys[j]
+            _cache_put((params, k), polys[j])
+    uniq = jnp.stack([local[k] for k in order])
+    slot = {k: j for j, k in enumerate(order)}
+    return uniq[jnp.asarray([slot[k] for k in row_keys])]

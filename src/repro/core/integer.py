@@ -13,12 +13,19 @@ streams the BSK once for the whole digit vector instead of D times
 (round-robin key reuse, paper §III-B / Fig. 13).
 
 Carry propagation strategies:
-  ripple  D rounds of batched (msg, carry) extraction; works for any
-          width >= 2.
-  prefix  Hillis-Steele scan over generate/propagate statuses:
-          2 + ceil(log2(D)) batched rounds; needs width >= 4 because the
-          status combine is a bivariate LUT over two 2-bit statuses.
-Both run every round as a single `lut_batch` call of >= D ciphertexts.
+  ripple     D rounds of batched (msg, carry) extraction; works for any
+             width >= 2.
+  prefix     Hillis-Steele scan over generate/propagate statuses:
+             2 + ceil(log2(D)) batched rounds; needs width >= 4 because
+             the status combine is a bivariate LUT over two 2-bit
+             statuses.
+  lookahead  two-level carry-lookahead for narrow windows (width < 4):
+             the status is kept as TWO single-bit ciphertexts (generate,
+             propagate) and each Hillis-Steele level splits into two
+             batched rounds of univariate LUTs over bit SUMS, so the
+             base-2 path drops its D-round ripple for
+             2*ceil(log2(D)) + 2 rounds.
+All run every round as a single `lut_batch` call of >= D ciphertexts.
 """
 from __future__ import annotations
 
@@ -158,6 +165,35 @@ def status_id_table(width: int) -> np.ndarray:
 
 
 @functools.lru_cache(maxsize=None)
+def generate_table(width: int, msg_bits: int) -> np.ndarray:
+    """Digit sum s -> generate bit [s >= base] (lookahead status)."""
+    base = 1 << msg_bits
+    return _tbl(width, lambda s: 1 if s >= base else 0)
+
+
+@functools.lru_cache(maxsize=None)
+def propagate_bit_table(width: int, msg_bits: int) -> np.ndarray:
+    """Digit sum s -> propagate bit [s == base - 1] (lookahead status)."""
+    base = 1 << msg_bits
+    return _tbl(width, lambda s: 1 if s == base - 1 else 0)
+
+
+@functools.lru_cache(maxsize=None)
+def bit_and_table(width: int) -> np.ndarray:
+    """Sum of two bits -> their AND ([x + y >= 2]); the bivariate bit op
+    as a univariate LUT over an LPU add (fits any width >= 2 window)."""
+    return _tbl(width, lambda v: 1 if v >= 2 else 0)
+
+
+@functools.lru_cache(maxsize=None)
+def bit_or_table(width: int) -> np.ndarray:
+    """Sum of two bits -> their OR ([x + y >= 1]).  On a single bit this
+    is the identity, so it doubles as the noise-refresh pass-through for
+    scan lanes whose prefix is already final."""
+    return _tbl(width, lambda v: 1 if v >= 1 else 0)
+
+
+@functools.lru_cache(maxsize=None)
 def pp_table(width: int, msg_bits: int, hi: bool) -> np.ndarray:
     """Partial product of two digits packed as a*base + b."""
     base = 1 << msg_bits
@@ -290,11 +326,13 @@ class IntegerContext:
         return out[:b]
 
     def _polys(self, tables: np.ndarray) -> jax.Array:
-        # byte-keyed cache: carry rounds reuse the same few tables, so the
-        # encode runs once per (table set, shape)
+        # stack-level cache on top of the process-wide per-row cache:
+        # repeated rounds reuse the same few stacks, and concurrent
+        # serving contexts share the row encodes
         key = tables.tobytes()
         if key not in self._poly_cache:
-            self._poly_cache[key] = glwe.make_lut_polys(tables, self.params)
+            self._poly_cache[key] = glwe.make_lut_polys_cached(
+                tables, self.params)
         return self._poly_cache[key]
 
     def _trivial_digits(self, spec: RadixSpec, value: int) -> jax.Array:
@@ -362,6 +400,60 @@ class IntegerContext:
         summed = msg.at[1:].add(carries[:-1])
         return self._lut(summed, np.tile(msg_table(w, m), (d, 1)))
 
+    def _propagate_lookahead(self, digits: jax.Array, spec: RadixSpec) -> jax.Array:
+        """Two-level carry-lookahead for narrow plaintext windows.
+
+        The packed Hillis-Steele scan (`_propagate_prefix`) needs a 4-bit
+        window for its radix-4 status pairs.  Below that, the
+        (generate, propagate) status lives in TWO single-bit ciphertexts
+        and each scan level becomes two batched rounds — the monoid
+        combine (g, p) o (g', p') = (g | (p & g'), p & p') decomposed
+        into its two levels of bit logic, each an AND/OR evaluated as a
+        univariate LUT over an LPU bit sum:
+
+          round A:  t_i  = p_i AND g_{i-dd}     ([p + g >= 2])
+                    p_i <- p_i AND p_{i-dd}
+          round B:  g_i <- g_i OR t_i           ([g + t >= 1])
+
+        1 + 2*ceil(log2(D)) + 1 batched rounds total, vs D ripple
+        rounds.  Preconditions: D > 1 and every digit value
+        <= 2*base - 2 (same as the prefix scan)."""
+        d = spec.n_digits
+        w, m = self.params.width, spec.msg_bits
+        # round 1: messages + both status bits, one 3D batch
+        batch = jnp.concatenate([digits, digits, digits], axis=0)
+        tables = np.concatenate([np.tile(msg_table(w, m), (d, 1)),
+                                 np.tile(generate_table(w, m), (d, 1)),
+                                 np.tile(propagate_bit_table(w, m), (d, 1))])
+        out = self._lut(batch, tables)
+        msg, g, p = out[:d], out[d:2 * d], out[2 * d:]
+        dd = 1
+        while dd < d:
+            k = d - dd
+            # round A: lookahead terms + propagate combine for lanes >= dd;
+            # lanes below the scan distance refresh p through the bit
+            # identity (OR) so the round stays >= D ciphertexts
+            batch = jnp.concatenate([lwe.add(p[dd:], g[:-dd]),
+                                     lwe.add(p[dd:], p[:-dd]),
+                                     p[:dd]], axis=0)
+            tables = np.concatenate([np.tile(bit_and_table(w), (2 * k, 1)),
+                                     np.tile(bit_or_table(w), (dd, 1))])
+            out = self._lut(batch, tables)
+            t = out[:k]
+            p = jnp.concatenate([out[2 * k:], out[k:2 * k]], axis=0)
+            # round B: fold the lookahead term into g (lanes < dd final)
+            batch = jnp.concatenate([g[:dd], lwe.add(g[dd:], t)], axis=0)
+            g = self._lut(batch, np.tile(bit_or_table(w), (d, 1)))
+            dd *= 2
+        # g[i] is now the carry OUT of digit i; stitch and fold below base
+        summed = msg.at[1:].add(g[:-1])
+        return self._lut(summed, np.tile(msg_table(w, m), (d, 1)))
+
+    @staticmethod
+    def lookahead_rounds(n_digits: int) -> int:
+        """Batched-PBS rounds of the two-level lookahead strategy."""
+        return 2 + 2 * max(0, (n_digits - 1).bit_length())
+
     def propagate(self, rct: RadixCiphertext, max_val: int | None = None,
                   strategy: str = "auto") -> RadixCiphertext:
         """Carry-propagate so every digit lands in [0, base).
@@ -382,7 +474,13 @@ class IntegerContext:
             max_val = (base - 1) + (max_val >> spec.msg_bits)
             digits = self._extract_round(digits, spec)
         if strategy == "auto":
-            strategy = "prefix" if (w >= 4 and spec.n_digits > 1) else "ripple"
+            if w >= 4 and spec.n_digits > 1:
+                strategy = "prefix"
+            elif (spec.n_digits > 1
+                  and self.lookahead_rounds(spec.n_digits) < spec.n_digits):
+                strategy = "lookahead"       # narrow window, long chains
+            else:
+                strategy = "ripple"
         if strategy == "prefix":
             # the radix-4 status pack needs a 4-bit window, and a single
             # digit has no carries to scan — explicit misuse would decrypt
@@ -390,6 +488,10 @@ class IntegerContext:
             assert w >= 4 and spec.n_digits > 1, (
                 "prefix carry scan needs width >= 4 and more than one digit")
             digits = self._propagate_prefix(digits, spec)
+        elif strategy == "lookahead":
+            assert spec.n_digits > 1, (
+                "lookahead carry scan needs more than one digit")
+            digits = self._propagate_lookahead(digits, spec)
         else:
             digits = self._propagate_ripple(digits, spec, spec.n_digits)
         return RadixCiphertext(spec, digits)

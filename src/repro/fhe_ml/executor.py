@@ -84,6 +84,43 @@ def interpret(g: Graph, inputs: list, width: int,
 # encrypted executor
 # --------------------------------------------------------------------------
 
+def eval_linear_ct_op(n, vals: dict, p: TFHEParams):
+    """Evaluate one PBS-free IR node on ciphertext tensors (LPU work:
+    add/sub/addc/mulc/linear/reshape/concat).  Returns the result array,
+    or None if `n` is not a linear op.  Shared by `FheExecutor` and
+    `repro.serve.IrInterpreter` so their linear semantics cannot
+    diverge."""
+    delta = p.delta
+    if n.op == "add":
+        return lwe.add(vals[n.inputs[0]], vals[n.inputs[1]])
+    if n.op == "sub":
+        return lwe.sub(vals[n.inputs[0]], vals[n.inputs[1]])
+    if n.op == "addc":
+        c = torus.encode(jnp.asarray(
+            np.asarray(n.attrs["const"], np.int64).reshape(-1)
+            % (1 << p.width), dtype=U64), delta)
+        x = vals[n.inputs[0]]
+        c = jnp.broadcast_to(c, x.shape[:-1])
+        return x.at[..., -1].add(c)
+    if n.op == "mulc":
+        c = np.asarray(n.attrs["const"], np.int64).reshape(-1)
+        return vals[n.inputs[0]] * jnp.asarray(
+            c, jnp.int64)[:, None].astype(U64)
+    if n.op == "linear":
+        W = jnp.asarray(np.asarray(n.attrs["W"], np.int64))
+        x = vals[n.inputs[0]]                      # (in, big_n+1)
+        y = jnp.einsum("io,id->od", W.astype(U64), x)
+        if n.attrs.get("bias") is not None:
+            b = torus.encode(jnp.asarray(
+                np.asarray(n.attrs["bias"], np.int64).reshape(-1)
+                % (1 << p.width), U64), delta)
+            y = y.at[..., -1].add(b)
+        return y
+    if n.op in ("reshape", "concat"):
+        return vals[n.inputs[0]]
+    return None
+
+
 class FheExecutor:
     """Runs a graph on real ciphertexts via the batched engine."""
 
@@ -133,45 +170,20 @@ class FheExecutor:
 
     # -- run ------------------------------------------------------------------
     def run(self, g: Graph, enc_inputs: list) -> dict:
-        p = self.params
-        delta = p.delta
         vals: dict = {}
         ks_cache: dict = {}
         it = iter(enc_inputs)
         for n in g.nodes:
             if n.op == "input":
                 vals[n.id] = next(it)
-            elif n.op == "add":
-                vals[n.id] = lwe.add(vals[n.inputs[0]], vals[n.inputs[1]])
-            elif n.op == "sub":
-                vals[n.id] = lwe.sub(vals[n.inputs[0]], vals[n.inputs[1]])
-            elif n.op == "addc":
-                c = torus.encode(jnp.asarray(
-                    np.asarray(n.attrs["const"], np.int64).reshape(-1)
-                    % (1 << p.width), dtype=U64), delta)
-                x = vals[n.inputs[0]]
-                c = jnp.broadcast_to(c, x.shape[:-1])
-                vals[n.id] = x.at[..., -1].add(c)
-            elif n.op == "mulc":
-                c = np.asarray(n.attrs["const"], np.int64).reshape(-1)
-                vals[n.id] = vals[n.inputs[0]] * jnp.asarray(
-                    c, jnp.int64)[:, None].astype(U64)
-            elif n.op == "linear":
-                W = jnp.asarray(np.asarray(n.attrs["W"], np.int64))
-                x = vals[n.inputs[0]]                      # (in, big_n+1)
-                y = jnp.einsum("io,id->od", W.astype(U64), x)
-                if n.attrs.get("bias") is not None:
-                    b = torus.encode(jnp.asarray(
-                        np.asarray(n.attrs["bias"], np.int64).reshape(-1)
-                        % (1 << p.width), U64), delta)
-                    y = y.at[..., -1].add(b)
-                vals[n.id] = y
+                continue
+            out = eval_linear_ct_op(n, vals, self.params)
+            if out is not None:
+                vals[n.id] = out
             elif n.op == "lut":
                 vals[n.id] = self._pbs(vals[n.inputs[0]],
                                        np.asarray(n.attrs["table"]),
                                        n.inputs[0], ks_cache)
-            elif n.op in ("reshape", "concat"):
-                vals[n.id] = vals[n.inputs[0]]
             else:
                 raise ValueError(n.op)
         return vals

@@ -1,0 +1,55 @@
+"""repro.serve — multi-tenant FHE serving runtime.
+
+The compiler (`repro.compiler`) plans programs and the engine
+(`repro.core.engine.TaurusEngine`) executes batched PBS; this package is
+the layer between them that serves CONCURRENT clients, turning the
+paper's two throughput levers — key-reuse-aware batching of bootstraps
+and operation deduplication — into online, cross-request mechanisms:
+
+  interpreter  `IrInterpreter` executes compiled `repro.compiler.ir`
+               graphs (including the radix_* wide-integer ops) on real
+               ciphertexts, routing every bootstrap through
+               `engine.lut_batch`.
+  scheduler    `FusedLutScheduler` barriers the in-flight requests'
+               ready LUT rounds, groups them by parameter set /
+               bootstrapping key, deduplicates identical
+               (ciphertext, table) rows online
+               (`repro.compiler.passes.fused_round_dedup`), and
+               dispatches ONE fused `lut_batch` per group — the BSK
+               streams once for everyone (paper §III-B, Fig. 13).
+  runtime      `ServeRuntime` is the async front door: request queue,
+               admission control (`max_inflight`,
+               `max_queued_per_client`), round-robin per-client
+               fairness, and fault retry through
+               `repro.runtime.fault.StepRunner`.
+  programs     client-side helpers that trace radix programs into IR
+               and encrypt/decrypt their inputs/outputs.
+
+Typical serving loop (see `examples/serve_requests.py` and the
+`benchmarks/serve_throughput.py` requests/sec benchmark):
+
+    ctx = TFHEContext.create(key, params)          # client keys
+    rt = ServeRuntime(ctx, max_inflight=8)         # server
+    g = radix_binop_program("radix_add", bits=16, msg_bits=2)
+    h = rt.submit(g, encrypt_request_inputs(ic, key, [a, b], 16), "alice")
+    result = decrypt_radix_output(ic, h.outputs()[0], 16)   # client
+
+Scaling PRs plug in here: sharded serving splits the scheduler's engine
+groups across hosts, elastic capacity resizes `max_inflight`, and
+encrypted-LLM traffic submits `repro.fhe_ml`-lowered graphs through the
+same queue.
+"""
+from repro.serve.interpreter import IrInterpreter
+from repro.serve.programs import (decrypt_radix_output,
+                                  encrypt_request_inputs,
+                                  radix_binop_program, radix_unop_program)
+from repro.serve.runtime import (AdmissionError, RequestHandle,
+                                 ServeRequest, ServeRuntime)
+from repro.serve.scheduler import FusedEngineProxy, FusedLutScheduler
+
+__all__ = [
+    "AdmissionError", "FusedEngineProxy", "FusedLutScheduler",
+    "IrInterpreter", "RequestHandle", "ServeRequest", "ServeRuntime",
+    "decrypt_radix_output", "encrypt_request_inputs",
+    "radix_binop_program", "radix_unop_program",
+]

@@ -1,0 +1,118 @@
+"""IR interpreter: executes compiled `repro.compiler.ir` graphs on real
+ciphertexts through an engine's batched PBS entry point.
+
+This is the serving-side execution contract the compiler lowers to.  It
+differs from `repro.fhe_ml.executor.FheExecutor` in two ways that matter
+for a multi-tenant runtime:
+
+  * every bootstrap goes through `engine.lut_batch` — hand it a
+    `FusedEngineProxy` and all of a request's PBS rounds fuse with every
+    other in-flight request's rounds (cross-request key reuse + dedup);
+  * it executes the `radix_*` wide-integer ops that the compiler
+    previously only lowered for scheduling/cost, by dispatching each
+    digit vector through `IntegerContext` (ROADMAP: executor
+    integration).
+
+A radix node's tensor has its digit vector on the LAST axis; the
+interpreter executes one `IntegerContext` op per leading-axis vector.
+(Batching the vectors of one tensor into shared rounds is a recorded
+serve-layer follow-up — cross-request fusion already recovers the
+occupancy for the serving path.)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compiler.ir import Graph, RADIX_OPS
+from repro.core import glwe
+from repro.core.engine import TaurusEngine
+from repro.core.integer import IntegerContext, RadixCiphertext
+from repro.fhe_ml.executor import eval_linear_ct_op
+
+
+class IrInterpreter:
+    """Runs a compiled Graph on real ciphertexts via `engine.lut_batch`.
+
+    `engine` is a TaurusEngine or a `FusedEngineProxy`; with a proxy,
+    per-round padding is left to the fused scheduler (padding tiny
+    per-request rounds would only dilute the fused batch)."""
+
+    def __init__(self, ctx, engine=None, *,
+                 pad_rounds: Optional[bool] = None):
+        self.ctx = ctx
+        self.engine = engine if engine is not None \
+            else TaurusEngine.from_context(ctx)
+        self.params = ctx.params
+        if pad_rounds is None:
+            pad_rounds = not getattr(self.engine, "fused", False)
+        self.int_ctx = IntegerContext(ctx, self.engine,
+                                      pad_batches=pad_rounds)
+        self._poly_cache: dict = {}
+
+    # -- helpers -------------------------------------------------------------
+    def _lut_poly(self, table: np.ndarray) -> jax.Array:
+        key = np.ascontiguousarray(table).tobytes()
+        if key not in self._poly_cache:
+            self._poly_cache[key] = glwe.make_lut_polys_cached(
+                np.asarray(table)[None], self.params)[0]
+        return self._poly_cache[key]
+
+    def _radix(self, n, vals) -> jax.Array:
+        m, d = n.attrs["msg_bits"], n.attrs["n_digits"]
+        ic = self.int_ctx
+        spec = ic.spec(m * d, m)
+        width = self.params.big_n + 1
+        a = vals[n.inputs[0]].reshape(-1, d, width)
+        b = None
+        if len(n.inputs) == 2:
+            b = vals[n.inputs[1]].reshape(-1, d, width)
+        outs = []
+        for v in range(a.shape[0]):
+            ra = RadixCiphertext(spec, a[v])
+            if n.op == "radix_add":
+                r = ic.add(ra, RadixCiphertext(spec, b[v])).digits
+            elif n.op == "radix_sub":
+                r = ic.sub(ra, RadixCiphertext(spec, b[v])).digits
+            elif n.op == "radix_mul":
+                r = ic.mul(ra, RadixCiphertext(spec, b[v])).digits
+            elif n.op == "radix_relu":
+                r = ic.relu_clamp(ra).digits
+            elif n.op == "radix_cmp":
+                r = ic.compare(ra, RadixCiphertext(spec, b[v]))[None]
+            else:
+                raise ValueError(n.op)
+            outs.append(r)
+        return jnp.concatenate(outs, axis=0)
+
+    # -- run ------------------------------------------------------------------
+    def run(self, g: Graph, enc_inputs: list) -> dict:
+        """enc_inputs: one (n_elements, k*N+1) ciphertext array per input
+        node.  Returns {node_id: ciphertext array} for every node."""
+        vals: dict = {}
+        it = iter(enc_inputs)
+        for n in g.nodes:
+            if n.op == "input":
+                vals[n.id] = next(it)
+                continue
+            out = eval_linear_ct_op(n, vals, self.params)
+            if out is not None:
+                vals[n.id] = out
+            elif n.op == "lut":
+                cts = vals[n.inputs[0]]
+                poly = self._lut_poly(n.attrs["table"])
+                polys = jnp.broadcast_to(poly, (cts.shape[0],) + poly.shape)
+                vals[n.id] = self.engine.lut_batch(cts, polys)
+            elif n.op in RADIX_OPS:
+                vals[n.id] = self._radix(n, vals)
+            else:
+                raise ValueError(n.op)
+        return vals
+
+    def run_outputs(self, g: Graph, enc_inputs: list) -> list:
+        """Like `run`, but returns just the graph outputs, in order."""
+        vals = self.run(g, enc_inputs)
+        return [vals[i] for i in g.outputs]

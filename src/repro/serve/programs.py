@@ -1,0 +1,56 @@
+"""Client-side program builders for the serving runtime.
+
+Traces small wide-integer programs into `repro.compiler.ir` graphs and
+encrypts/decrypts their radix inputs/outputs.  A client keeps the secret
+key; the runtime only ever sees the compiled graph and big-key digit
+ciphertexts.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.compiler.ir import Graph, trace
+from repro.core.integer import IntegerContext, RadixCiphertext
+
+
+def radix_binop_program(op: str, bits: int, msg_bits: int) -> Graph:
+    """Graph of one radix binary op (radix_add/sub/mul/cmp) over two
+    D-digit vectors."""
+    d = bits // msg_bits
+
+    def fn(a, b):
+        return getattr(a, op)(b, msg_bits=msg_bits)
+
+    return trace(fn, (d,), (d,))
+
+
+def radix_unop_program(op: str, bits: int, msg_bits: int) -> Graph:
+    """Graph of one radix unary op (radix_relu) over a D-digit vector."""
+    d = bits // msg_bits
+
+    def fn(a):
+        return getattr(a, op)(msg_bits=msg_bits)
+
+    return trace(fn, (d,))
+
+
+def encrypt_request_inputs(ic: IntegerContext, key: jax.Array,
+                           values: list, bits: int,
+                           msg_bits: int | None = None) -> list:
+    """Encrypt one integer per graph input; returns the (D, k*N+1) digit
+    arrays the interpreter consumes."""
+    out = []
+    for v in values:
+        key, sub = jax.random.split(key)
+        out.append(ic.encrypt(sub, int(v), bits, msg_bits).digits)
+    return out
+
+
+def decrypt_radix_output(ic: IntegerContext, arr, bits: int,
+                         msg_bits: int | None = None) -> list:
+    """Decrypt an interpreter output of one or more digit vectors back to
+    integers (client side)."""
+    spec = ic.spec(bits, msg_bits)
+    vecs = np.asarray(arr).reshape(-1, spec.n_digits, arr.shape[-1])
+    return [ic.decrypt(RadixCiphertext(spec, v)) for v in vecs]

@@ -1,0 +1,242 @@
+"""Multi-tenant serving runtime: request queue, admission control,
+per-client fairness, fault retry.
+
+`ServeRuntime.submit(graph, enc_inputs, client_id)` returns a
+`RequestHandle` immediately (async queue semantics — `handle.wait()`
+joins the result).  Admission pulls queued requests round-robin across
+clients, so one client flooding the queue cannot starve another: a
+request is admitted within (#clients x its position in its own client's
+queue + #clients) admissions, which `tests/test_serve.py` bounds.  At
+most `max_inflight` requests execute concurrently (each on a worker
+thread whose PBS rounds fuse through `FusedLutScheduler`), and each
+client's backlog is capped at `max_queued_per_client` — beyond it
+`submit` raises `AdmissionError` (shed load at the door, not mid-round).
+
+Failures retry through `repro.runtime.fault.StepRunner`: a request whose
+execution raises (a poisoned round, a device loss) is re-run from its
+encrypted inputs up to `fault.max_retries` times; a failed fused round
+fans its error out to every participating request, and each retries
+independently.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Callable, Optional
+
+from repro.compiler.ir import Graph
+from repro.core.engine import TaurusEngine
+from repro.runtime.fault import FaultConfig, StepRunner
+from repro.serve.interpreter import IrInterpreter
+from repro.serve.scheduler import FusedLutScheduler
+
+
+class AdmissionError(RuntimeError):
+    """A client's queue is full — the request was not accepted."""
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    client_id: str
+    graph: Graph
+    enc_inputs: list
+    request_id: int = -1
+
+
+class RequestHandle:
+    """Async result handle for one submitted request."""
+
+    def __init__(self, request: ServeRequest):
+        self.request = request
+        self.result: Optional[dict] = None
+        self.error: Optional[BaseException] = None
+        self.retries = 0
+        self._done = threading.Event()
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> dict:
+        """Block until executed; returns {node_id: ciphertext array}."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(
+                f"request {self.request.request_id} still queued/running")
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+    def outputs(self) -> list:
+        """Graph outputs of the finished request, in order."""
+        vals = self.wait()
+        return [vals[i] for i in self.request.graph.outputs]
+
+
+class ServeRuntime:
+    def __init__(self, ctx, engine: Optional[TaurusEngine] = None, *,
+                 fused: bool = True, dedup: bool = True,
+                 max_inflight: int = 8,
+                 max_queued_per_client: Optional[int] = None,
+                 fault: Optional[FaultConfig] = None,
+                 fault_hook: Optional[Callable] = None,
+                 start_paused: bool = False):
+        self.ctx = ctx
+        self.engine = engine if engine is not None \
+            else TaurusEngine.from_context(ctx)
+        self.fused = fused
+        self.scheduler = FusedLutScheduler(dedup=dedup) if fused else None
+        self.fault = fault if fault is not None else FaultConfig(max_retries=2)
+        # test/chaos hook: called as fault_hook(request, attempt) at the
+        # start of every execution attempt; raising simulates a failure
+        self.fault_hook = fault_hook
+        self.max_inflight = max_inflight
+        self.max_queued_per_client = max_queued_per_client
+        self._lock = threading.Lock()
+        self._queues: dict = {}                  # client -> deque[handle]
+        self._client_ring: list = []             # round-robin order
+        self._rr = 0
+        self._inflight = 0
+        self._next_id = 0
+        self._paused = start_paused
+        self._closed = False
+        self._threads: list = []
+        # "admitted" is an observability log (fairness tests/monitoring),
+        # bounded so a long-lived server doesn't grow per-request state
+        self.stats = {"admitted": collections.deque(maxlen=10_000),
+                      "completed": 0, "failed": 0,
+                      "retries": 0, "rejected": 0}
+
+    # -- client API ----------------------------------------------------------
+    def submit(self, graph: Graph, enc_inputs: list,
+               client_id: str = "client-0") -> RequestHandle:
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("runtime is closed")
+            queued = len(self._queues.get(client_id, ()))
+            if (self.max_queued_per_client is not None
+                    and queued >= self.max_queued_per_client):
+                self.stats["rejected"] += 1
+                raise AdmissionError(
+                    f"client {client_id!r} already has {queued} queued "
+                    f"requests (cap {self.max_queued_per_client})")
+            q = self._queues.setdefault(client_id, collections.deque())
+            req = ServeRequest(client_id, graph, enc_inputs, self._next_id)
+            self._next_id += 1
+            handle = RequestHandle(req)
+            q.append(handle)
+            if client_id not in self._client_ring:
+                self._client_ring.append(client_id)
+            self._admit_locked()
+        return handle
+
+    def pause(self) -> None:
+        """Stop admitting (in-flight requests finish); queue keeps filling."""
+        with self._lock:
+            self._paused = True
+
+    def resume(self) -> None:
+        with self._lock:
+            self._paused = False
+            self._admit_locked()
+
+    def drain(self) -> None:
+        """Block until every queued/in-flight request has completed."""
+        while True:
+            with self._lock:
+                queued = sum(len(q) for q in self._queues.values())
+                busy = self._inflight
+                if queued and not busy and self._paused:
+                    raise RuntimeError(
+                        "drain() on a paused runtime with queued requests "
+                        "— call resume() first")
+            if not queued and not busy:
+                return
+            for t in list(self._threads):
+                t.join(timeout=0.05)
+
+    def close(self) -> None:
+        self.drain()
+        with self._lock:
+            self._closed = True
+        for t in self._threads:
+            t.join()
+
+    # -- admission (round-robin across clients) ------------------------------
+    def _admit_locked(self) -> None:
+        while not self._paused and self._inflight < self.max_inflight:
+            handle = self._next_handle_locked()
+            if handle is None:
+                return
+            self._inflight += 1
+            if self.fused:
+                # register BEFORE the worker starts so a wave of
+                # admissions forms one full fusion barrier
+                self.scheduler.register()
+            self.stats["admitted"].append(
+                (handle.request.client_id, handle.request.request_id))
+            t = threading.Thread(target=self._worker, args=(handle,),
+                                 daemon=True)
+            self._threads.append(t)
+            t.start()
+
+    def _next_handle_locked(self) -> Optional[RequestHandle]:
+        ring = self._client_ring
+        nclients = len(ring)
+        for step in range(nclients):
+            idx = (self._rr + step) % nclients
+            cid = ring[idx]
+            q = self._queues.get(cid)
+            if q:
+                handle = q.popleft()
+                if q:
+                    self._rr = (idx + 1) % nclients
+                else:
+                    # drop the drained client so a long-lived server's
+                    # ring/queue map doesn't grow with every client ever
+                    # seen (resubmits re-enter at the ring's tail)
+                    del self._queues[cid]
+                    ring.pop(idx)
+                    self._rr = idx % len(ring) if ring else 0
+                return handle
+        return None
+
+    # -- execution -----------------------------------------------------------
+    def _worker(self, handle: RequestHandle) -> None:
+        req = handle.request
+        try:
+            eng = self.scheduler.proxy(self.engine) if self.fused \
+                else self.engine
+            interp = IrInterpreter(self.ctx, eng)
+            attempt = {"n": 0}
+
+            def step():
+                attempt["n"] += 1
+                if self.fault_hook is not None:
+                    self.fault_hook(req, attempt["n"])
+                return interp.run(req.graph, req.enc_inputs)
+
+            runner = StepRunner(step, self.fault)
+            try:
+                handle.result = runner.run()
+            finally:
+                # count retries whether the request ultimately succeeded
+                # or exhausted its budget — retry storms from poisoned
+                # requests must show up in the stats
+                handle.retries = runner.stats["retries"]
+        except BaseException as err:  # noqa: BLE001 — surfaced via handle
+            handle.error = err
+        finally:
+            if self.fused:
+                self.scheduler.unregister()
+            with self._lock:
+                self._inflight -= 1
+                self.stats["retries"] += handle.retries
+                if handle.error is None:
+                    self.stats["completed"] += 1
+                else:
+                    self.stats["failed"] += 1
+                self._threads = [t for t in self._threads
+                                 if t.is_alive()
+                                 and t is not threading.current_thread()]
+                self._admit_locked()
+            handle._done.set()

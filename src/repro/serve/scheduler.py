@@ -1,0 +1,267 @@
+"""Cross-request PBS round scheduler — the paper's key-reuse batching,
+applied ONLINE across concurrent clients.
+
+Each in-flight request executes its compiled IR program on its own worker
+thread; every nonlinear step blocks in `FusedLutScheduler.submit` instead
+of dispatching its own `engine.lut_batch`.  The LAST active request to
+block becomes the round leader (a barrier, no dispatcher thread): it
+groups all pending rounds by engine — i.e. by parameter set and
+bootstrapping key, so each fused `lut_batch` streams the BSK once for the
+whole group — deduplicates identical (ciphertext, LUT) rows
+(`repro.compiler.passes.fused_round_dedup`, the serving-time face of the
+paper's dedup passes), pads the fused batch to a reusable compiled shape,
+dispatches ONE batched PBS per group, and scatters the refreshed
+ciphertexts back to every waiting request.
+
+Why this wins (measured in `benchmarks/serve_throughput.py`): a fused
+round replaces N small `lut_batch` calls with one large one, so the fixed
+per-dispatch cost is paid once, per-ciphertext blind-rotation cost drops
+with batch size (the Fig. 13 bandwidth argument), per-request padding
+waste disappears, and duplicate work (request retries, replayed queries)
+is bootstrapped exactly once.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compiler.passes import fused_round_dedup
+from repro.core import glwe
+from repro.core.engine import TaurusEngine, validate_lut_tables
+from repro.core.integer import _pad_batch
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One request's blocked PBS round."""
+    engine: object
+    cts: jax.Array          # (B, k*N+1)
+    polys: jax.Array        # (B, N)
+    keys: Optional[list] = None     # per-row (ct, poly) dedup digests
+    result: Optional[jax.Array] = None
+    error: Optional[BaseException] = None
+
+
+def _row_keys(cts: jax.Array, polys: jax.Array) -> list:
+    """Per-row (ciphertext, LUT-poly) dedup keys.  Computed on the
+    REQUEST's own thread before it blocks at the barrier, so the round
+    leader's critical path is a dict scan instead of a host sync + hash
+    of the whole fused batch."""
+    ct_rows, poly_rows = np.asarray(cts), np.asarray(polys)
+    return [(ct_rows[i].tobytes(), poly_rows[i].tobytes())
+            for i in range(ct_rows.shape[0])]
+
+
+class FusedEngineProxy:
+    """Engine facade handed to per-request interpreters.
+
+    Linear ops run locally (LPU work needs no cross-request fusion);
+    every `lut_batch` routes through the shared scheduler so concurrent
+    requests' rounds fuse into one BSK-streaming batch."""
+
+    fused = True
+
+    def __init__(self, scheduler: "FusedLutScheduler", engine: TaurusEngine):
+        self._scheduler = scheduler
+        self._engine = engine
+
+    @property
+    def params(self):
+        return self._engine.params
+
+    @property
+    def batch_size(self):
+        return self._engine.batch_size
+
+    def lut_batch(self, cts: jax.Array, lut_polys: jax.Array) -> jax.Array:
+        if lut_polys.shape[0] != cts.shape[0]:
+            raise ValueError(
+                f"lut_batch: {cts.shape[0]} ciphertexts but "
+                f"{lut_polys.shape[0]} LUT polynomials")
+        keys = _row_keys(cts, lut_polys) if self._scheduler.dedup else None
+        return self._scheduler.submit(self._engine, cts, lut_polys, keys)
+
+    def lut_batch_tables(self, cts: jax.Array, tables) -> jax.Array:
+        tables = validate_lut_tables(cts, tables, self.params)
+        return self.lut_batch(
+            cts, glwe.make_lut_polys_cached(tables, self.params))
+
+    # -- linear ops delegate straight to the engine -------------------------
+    def add(self, a, b):
+        return self._engine.add(a, b)
+
+    def sub(self, a, b):
+        return self._engine.sub(a, b)
+
+    def scalar_mul(self, a, c):
+        return self._engine.scalar_mul(a, c)
+
+    def add_plain(self, a, msg):
+        return self._engine.add_plain(a, msg)
+
+    def trivial(self, msg):
+        return self._engine.trivial(msg)
+
+
+class FusedLutScheduler:
+    """Barrier-style round scheduler over any number of engines.
+
+    `register()`/`unregister()` bracket each active request; `submit()`
+    blocks a request's round until every active request is blocked (or
+    `max_wait_s` elapses — stragglers stuck in long linear stretches
+    can't stall the fleet forever), then the leader dispatches the fused
+    round.  Used through `proxy(engine)`, which returns the engine facade
+    request interpreters consume.
+    """
+
+    def __init__(self, *, dedup: bool = True, pad_batches: bool = True,
+                 max_wait_s: float = 10.0):
+        self.dedup = dedup
+        self.pad_batches = pad_batches
+        self.max_wait_s = max_wait_s
+        self._cv = threading.Condition()
+        self._active = 0
+        self._pending: list = []
+        self.stats = {
+            "fused_rounds": 0,       # engine-group dispatches
+            "logical_luts": 0,       # rows requested by interpreters
+            "dispatched_luts": 0,    # rows after dedup, before padding
+            "padded_luts": 0,        # rows entering engine.lut_batch
+            "dedup_hits": 0,
+            # blocked requests / active requests, bounded observability log
+            "occupancy": collections.deque(maxlen=10_000),
+        }
+
+    # -- lifecycle -----------------------------------------------------------
+    def proxy(self, engine: TaurusEngine) -> FusedEngineProxy:
+        return FusedEngineProxy(self, engine)
+
+    def register(self) -> None:
+        """Mark one request as actively executing (fusion barrier width)."""
+        with self._cv:
+            self._active += 1
+
+    def unregister(self) -> None:
+        with self._cv:
+            self._active -= 1
+            # a finishing request may complete the barrier for the rest
+            self._cv.notify_all()
+
+    # -- metrics -------------------------------------------------------------
+    @property
+    def dedup_hit_rate(self) -> float:
+        n = self.stats["logical_luts"]
+        return self.stats["dedup_hits"] / n if n else 0.0
+
+    @property
+    def mean_occupancy(self) -> float:
+        occ = self.stats["occupancy"]
+        return float(np.mean(occ)) if occ else 0.0
+
+    # -- the blocking round entry -------------------------------------------
+    def submit(self, engine: TaurusEngine, cts: jax.Array,
+               polys: jax.Array, keys: Optional[list] = None) -> jax.Array:
+        entry = _Pending(engine, cts, polys,
+                         keys if self.dedup else None)
+        deadline = time.monotonic() + self.max_wait_s
+        with self._cv:
+            self._pending.append(entry)
+            while entry.result is None and entry.error is None:
+                if self._pending and len(self._pending) >= self._active:
+                    self._dispatch_locked()     # barrier complete: lead
+                    continue
+                if time.monotonic() >= deadline:
+                    if entry in self._pending:
+                        # straggler timeout: flush a partial round rather
+                        # than stall the fleet forever
+                        self._dispatch_locked()
+                        continue
+                    # our entry is owned by an in-flight dispatch (lock
+                    # released by its leader) — don't flush OTHER
+                    # requests' fresh entries solo or spin; just wait
+                    deadline = time.monotonic() + self.max_wait_s
+                # leaders/unregister notify promptly; the timeout only
+                # bounds how late a deadline-triggered partial dispatch
+                # can fire
+                self._cv.wait(timeout=0.25)
+        if entry.error is not None:
+            raise RuntimeError("fused PBS round failed") from entry.error
+        return entry.result
+
+    # -- leader dispatch (called with the lock held) ------------------------
+    def _dispatch_locked(self) -> None:
+        pending, self._pending = self._pending, []
+        if not pending:
+            return
+        self.stats["occupancy"].append(
+            len(pending) / max(self._active, len(pending)))
+        groups: dict = {}
+        for e in pending:
+            groups.setdefault(id(e.engine), []).append(e)
+        # the heavy part (the dispatch may trigger an XLA compile) runs
+        # with the lock RELEASED so new requests can register/enqueue for
+        # the next round meanwhile; the popped entries are owned by this
+        # leader alone, and stats deltas are folded back in UNDER the
+        # lock (a straggler-timeout leader can run concurrently)
+        deltas: list = []
+        self._cv.release()
+        try:
+            for entries in groups.values():
+                try:
+                    deltas.append(
+                        self._dispatch_group(entries[0].engine, entries))
+                except BaseException as err:  # noqa: BLE001 — fan it out
+                    for e in entries:
+                        e.error = err
+        finally:
+            self._cv.acquire()
+        for d in deltas:
+            for k, v in d.items():
+                self.stats[k] += v
+        self._cv.notify_all()
+
+    def _dispatch_group(self, engine: TaurusEngine, entries: list) -> dict:
+        """One fused lut_batch for every round sharing this engine's BSK.
+        Returns the stats delta (folded into self.stats under the lock)."""
+        cts = jnp.concatenate([e.cts for e in entries], axis=0)
+        polys = jnp.concatenate([e.polys for e in entries], axis=0)
+        n = int(cts.shape[0])
+        delta = {"fused_rounds": 1, "logical_luts": n, "dedup_hits": 0}
+        inverse = None
+        if self.dedup:
+            keys: list = []
+            for e in entries:   # workers pre-hash; direct submits fall back
+                keys.extend(e.keys if e.keys is not None
+                            else _row_keys(e.cts, e.polys))
+            unique_idx, inverse, hits = fused_round_dedup(keys)
+            delta["dedup_hits"] = hits
+            if hits:
+                sel = np.asarray(unique_idx)
+                cts, polys = cts[sel], polys[sel]
+            else:
+                inverse = None
+        nb = int(cts.shape[0])
+        delta["dispatched_luts"] = nb
+        if self.pad_batches:
+            p = _pad_batch(nb)
+            if p > nb:                      # tile real rows to a reusable
+                reps = -(-p // nb)          # compiled batch shape
+                cts = jnp.tile(cts, (reps, 1))[:p]
+                polys = jnp.tile(polys, (reps, 1))[:p]
+        delta["padded_luts"] = int(cts.shape[0])
+        out = engine.lut_batch(cts, polys)[:nb]
+        if inverse is not None:
+            out = out[np.asarray(inverse)]
+        ofs = 0
+        for e in entries:
+            b = int(e.cts.shape[0])
+            e.result = out[ofs:ofs + b]
+            ofs += b
+        return delta

@@ -4,6 +4,7 @@ Key material comes from the session-scoped fixtures in conftest.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import glwe
 
@@ -74,3 +75,38 @@ def test_lut_batch_tables_heterogeneous(ctx_2bit, engine_2bit):
     got = np.asarray(jax.vmap(ctx.decrypt)(out))
     want = np.array([tables[i][int(m)] for i, m in enumerate(msgs)])
     np.testing.assert_array_equal(got, want)
+
+
+def test_lut_batch_tables_single_table_broadcasts(ctx_2bit, engine_2bit):
+    """A 1-D table is applied to the whole batch (the common one-LUT
+    case without callers hand-tiling it)."""
+    ctx, eng = ctx_2bit, engine_2bit
+    mod = ctx.params.plaintext_modulus
+    msgs = np.array([2, 0, 3], dtype=np.uint64)
+    cts = jax.vmap(lambda k, m: ctx.encrypt(k, m))(
+        jax.random.split(jax.random.key(46), len(msgs)), jnp.asarray(msgs)
+    )
+    table = np.array([(m + 1) % mod for m in range(mod)], dtype=np.uint64)
+    out = eng.lut_batch_tables(cts, table)
+    got = np.asarray(jax.vmap(ctx.decrypt)(out))
+    np.testing.assert_array_equal(got, (msgs + 1) % mod)
+
+
+def test_lut_batch_tables_count_mismatch_raises(ctx_2bit, engine_2bit):
+    """Regression: a table count that doesn't match the ciphertext batch
+    used to slip into the jitted PBS as a silent shape mismatch."""
+    ctx, eng = ctx_2bit, engine_2bit
+    mod = ctx.params.plaintext_modulus
+    cts = jax.vmap(lambda k, m: ctx.encrypt(k, m))(
+        jax.random.split(jax.random.key(47), 3),
+        jnp.asarray([0, 1, 2], dtype=U64)
+    )
+    two_tables = np.tile(np.arange(mod, dtype=np.uint64), (2, 1))
+    with pytest.raises(ValueError, match="3 ciphertexts but 2 tables"):
+        eng.lut_batch_tables(cts, two_tables)
+    with pytest.raises(ValueError, match="tables must be"):
+        eng.lut_batch_tables(cts, np.zeros((3, mod + 1), dtype=np.uint64))
+    # the poly-level entry validates too
+    polys = glwe.make_lut_polys(two_tables, ctx.params)
+    with pytest.raises(ValueError, match="3 ciphertexts but 2 LUT"):
+        eng.lut_batch(cts, polys)

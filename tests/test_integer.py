@@ -149,6 +149,28 @@ def test_carry_stops_mid_chain(ic4):
     assert ic4.decrypt(ic4.add(ca, cb)) == 0x0100
 
 
+def test_add16_base2_lookahead_carry_boundary(ic2):
+    """Width-2 params at 16 base-2 digits auto-select the two-level
+    carry-lookahead: 2 + 2*ceil(log2 D) batched rounds instead of the
+    D-round ripple, correct across every carry boundary."""
+    d = 16
+    want_rounds = 2 + 2 * (d - 1).bit_length()
+    assert want_rounds < d                       # the point of the scan
+    cases = [(0xFFFF, 1, 0x0000),                # full-length carry chain
+             (0x7FFF, 1, 0x8000),                # chain stops at the MSB
+             (0xAAAA, 0x5555, 0xFFFF),           # all-propagate, no carry
+             (0xD9C2, 0xA30F, 0x7CD1)]
+    for a, b, want in cases:
+        ca = ic2.encrypt(jax.random.key(a), a, 16)
+        cb = ic2.encrypt(jax.random.key(b + 7), b, 16)
+        ic2.reset_stats()
+        s = ic2.add(ca, cb)
+        assert ic2.decrypt(s) == want, (a, b)
+        assert np.all(ic2.decrypt_digits(s) < 2)       # fully propagated
+        assert ic2.stats["lut_batches"] == want_rounds
+        assert min(ic2.stats["batch_sizes"]) >= d      # full-width rounds
+
+
 def test_sub_wraps_two_complement(ic4):
     a, b = 0x1234, 0xBEEF
     ca = ic4.encrypt(jax.random.key(84), a, 16)

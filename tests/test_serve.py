@@ -1,0 +1,226 @@
+"""Serving runtime: IR interpreter vs plaintext oracle, cross-request
+fused rounds with online dedup (on/off results identical), per-client
+fairness, admission control, and fault retry.
+
+Key material comes from the session-scoped fixtures in conftest.py; the
+queue-level tests use linear-only programs so they spend no PBS time.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.compiler.ir import trace
+from repro.compiler.passes import fused_round_dedup
+from repro.core.integer import IntegerContext
+from repro.fhe_ml.executor import interpret
+from repro.runtime.fault import FaultConfig
+from repro.serve import (AdmissionError, IrInterpreter, ServeRuntime,
+                         decrypt_radix_output, encrypt_request_inputs,
+                         radix_binop_program, radix_unop_program)
+
+BITS = 8
+
+
+@pytest.fixture()
+def ic4(ctx_4bit, engine_4bit):
+    return IntegerContext.create(ctx_4bit, engine_4bit)
+
+
+def _linear_graph(const):
+    """PBS-free program: (x + const) on a 1-element tensor."""
+    return trace(lambda x: x + np.array([const]), (1,))
+
+
+# --- the IR execution contract (radix_* included) ---------------------------
+
+def test_interpreter_radix_ops_match_oracle(ctx_4bit, engine_4bit, ic4):
+    m = ic4.spec(BITS).msg_bits
+    interp = IrInterpreter(ctx_4bit, engine_4bit)
+    cases = [("radix_add", 173, 209, (173 + 209) % 256),
+             ("radix_sub", 60, 77, (60 - 77) % 256),
+             ("radix_mul", 13, 11, 143)]
+    for op, a, b, want in cases:
+        g = radix_binop_program(op, BITS, m)
+        enc = encrypt_request_inputs(ic4, jax.random.key(a), [a, b], BITS)
+        out = interp.run_outputs(g, enc)[0]
+        assert decrypt_radix_output(ic4, out, BITS)[0] == want, op
+    # unary + collapsing ops
+    g = radix_unop_program("radix_relu", BITS, m)
+    enc = encrypt_request_inputs(ic4, jax.random.key(1), [-5], BITS)
+    out = interp.run_outputs(g, enc)[0]
+    assert decrypt_radix_output(ic4, out, BITS)[0] == 0
+    g = radix_binop_program("radix_cmp", BITS, m)
+    enc = encrypt_request_inputs(ic4, jax.random.key(2), [9, 200], BITS)
+    out = interp.run_outputs(g, enc)[0]
+    assert int(ctx_4bit.decrypt(out[0])) == 1          # a < b
+
+
+def test_interpreter_lut_linear_match_plaintext_interpreter(ctx_2bit,
+                                                           engine_2bit):
+    """Tensor lut/linear/addc nodes agree with the fhe_ml plaintext
+    oracle on the same graph."""
+    mod = ctx_2bit.params.plaintext_modulus
+    table = np.array([(3 * v + 1) % mod for v in range(mod)])
+
+    def prog(x):
+        return (x + np.array([1, 0, 1, 0])).lut(table)
+
+    g = trace(prog, (4,))
+    xs = np.array([0, 1, 2, 1])
+    want = interpret(g, [xs], ctx_2bit.params.width)[g.outputs[0]]
+    enc = ctx_2bit.encrypt(jax.random.key(3), xs)
+    interp = IrInterpreter(ctx_2bit, engine_2bit)
+    out = interp.run_outputs(g, [enc])[0]
+    got = np.asarray(jax.vmap(ctx_2bit.decrypt)(out))
+    np.testing.assert_array_equal(got, want)
+
+
+# --- cross-request fused rounds + online dedup ------------------------------
+
+def _serve_wave(ctx, engine, jobs, *, dedup):
+    rt = ServeRuntime(ctx, engine, fused=True, dedup=dedup,
+                      max_inflight=len(jobs), start_paused=True)
+    handles = [rt.submit(g, enc, client_id=c) for c, g, enc in jobs]
+    rt.resume()
+    rt.drain()
+    return rt, [h.outputs()[0] for h in handles]
+
+
+def test_fused_dedup_on_off_decrypts_identical(ctx_4bit, engine_4bit, ic4):
+    """The dedup-on fused run must be indistinguishable (after
+    decryption) from dedup-off and from sequential execution — with a
+    duplicated request in the wave so dedup actually fires."""
+    m = ic4.spec(BITS).msg_bits
+    g = radix_binop_program("radix_add", BITS, m)
+    rng = np.random.default_rng(5)
+    jobs, wants = [], []
+    for i in range(3):
+        a, b = int(rng.integers(0, 256)), int(rng.integers(0, 256))
+        enc = encrypt_request_inputs(ic4, jax.random.key(40 + i), [a, b], BITS)
+        jobs.append((f"client-{i}", g, enc))
+        wants.append((a + b) % 256)
+    jobs.append(("client-0", g, jobs[0][2]))           # the retried twin
+    wants.append(wants[0])
+
+    rt_on, outs_on = _serve_wave(ctx_4bit, engine_4bit, jobs, dedup=True)
+    rt_off, outs_off = _serve_wave(ctx_4bit, engine_4bit, jobs, dedup=False)
+    seq = IrInterpreter(ctx_4bit, engine_4bit)
+    outs_seq = [seq.run_outputs(g, enc)[0] for _, g, enc in jobs]
+
+    for o_on, o_off, o_seq, want in zip(outs_on, outs_off, outs_seq, wants):
+        d_on = decrypt_radix_output(ic4, o_on, BITS)[0]
+        assert d_on == want
+        assert d_on == decrypt_radix_output(ic4, o_off, BITS)[0]
+        assert d_on == decrypt_radix_output(ic4, o_seq, BITS)[0]
+    assert rt_on.scheduler.stats["dedup_hits"] > 0     # the twin was free
+    assert rt_off.scheduler.stats["dedup_hits"] == 0
+    # every fused round saw the whole wave (all programs identical)
+    assert rt_on.scheduler.mean_occupancy == pytest.approx(1.0)
+    assert (rt_on.scheduler.stats["dispatched_luts"]
+            < rt_off.scheduler.stats["dispatched_luts"])
+
+
+def test_fused_round_dedup_scatter_reconstructs():
+    """Property (exhaustive over random rounds): dedup + scatter is
+    lossless and dispatches each unique (ciphertext, table) pair exactly
+    once, for any mix of duplicate rows."""
+    rng = np.random.default_rng(11)
+    for trial in range(200):
+        n = int(rng.integers(1, 40))
+        pairs = [(int(rng.integers(0, 8)), int(rng.integers(0, 4)))
+                 for _ in range(n)]
+        unique_idx, inverse, hits = fused_round_dedup(pairs)
+        assert len(unique_idx) + hits == len(pairs)
+        assert len(set(pairs[i] for i in unique_idx)) == len(unique_idx)
+        assert [pairs[unique_idx[j]] for j in inverse] == pairs
+
+
+# --- queue: fairness, admission, retry --------------------------------------
+
+def test_fairness_no_client_starves(ctx_2bit, engine_2bit):
+    """Round-robin admission: a flood from one client cannot starve
+    another — any request is admitted within
+    (#clients x (its position in its own client's queue + 1))
+    admissions of the wave start."""
+    rt = ServeRuntime(ctx_2bit, engine_2bit, fused=False, max_inflight=1,
+                      start_paused=True)
+    g = _linear_graph(1)
+    x = ctx_2bit.encrypt(jax.random.key(4), np.array([1]))
+    handles = {}
+    for i in range(4):                       # client A floods first
+        handles[("A", i)] = rt.submit(g, [x], client_id="A")
+    handles[("B", 0)] = rt.submit(g, [x], client_id="B")
+    handles[("C", 0)] = rt.submit(g, [x], client_id="C")
+    rt.resume()
+    rt.drain()
+    order = rt.stats["admitted"]
+    assert len(order) == 6
+    pos = {cid: [i for i, (c, _) in enumerate(order) if c == cid]
+           for cid in "ABC"}
+    n_clients = 3
+    # B and C each had one queued request: admitted within one RR sweep
+    assert pos["B"][0] < n_clients
+    assert pos["C"][0] < n_clients
+    # A's k-th request admitted within n_clients * (k + 1) admissions
+    for k, p in enumerate(pos["A"]):
+        assert p < n_clients * (k + 1)
+    # every request completed with the right value
+    for h in handles.values():
+        out = h.outputs()[0]
+        assert int(ctx_2bit.decrypt(out[0])) == 2
+
+
+def test_admission_control_rejects_over_cap(ctx_2bit, engine_2bit):
+    rt = ServeRuntime(ctx_2bit, engine_2bit, fused=False,
+                      max_queued_per_client=2, start_paused=True)
+    g = _linear_graph(0)
+    x = ctx_2bit.encrypt(jax.random.key(5), np.array([0]))
+    rt.submit(g, [x], client_id="A")
+    rt.submit(g, [x], client_id="A")
+    with pytest.raises(AdmissionError):
+        rt.submit(g, [x], client_id="A")
+    rt.submit(g, [x], client_id="B")       # other clients unaffected
+    assert rt.stats["rejected"] == 1
+    rt.resume()
+    rt.drain()
+    assert rt.stats["completed"] == 3
+
+
+def test_fault_retry_recovers(ctx_2bit, engine_2bit):
+    """A request whose execution fails (injected) retries through
+    runtime.fault.StepRunner and still completes."""
+    boom = {"left": 2}
+
+    def chaos(request, attempt):
+        if request.client_id == "flaky" and boom["left"] > 0:
+            boom["left"] -= 1
+            raise RuntimeError("injected failure")
+
+    rt = ServeRuntime(ctx_2bit, engine_2bit, fused=False,
+                      fault=FaultConfig(max_retries=3), fault_hook=chaos)
+    g = _linear_graph(2)
+    x = ctx_2bit.encrypt(jax.random.key(6), np.array([1]))
+    h_ok = rt.submit(g, [x], client_id="steady")
+    h_flaky = rt.submit(g, [x], client_id="flaky")
+    rt.drain()
+    assert int(ctx_2bit.decrypt(h_ok.outputs()[0][0])) == 3
+    assert int(ctx_2bit.decrypt(h_flaky.outputs()[0][0])) == 3
+    assert h_flaky.retries == 2 and h_ok.retries == 0
+    assert rt.stats["retries"] == 2 and rt.stats["failed"] == 0
+
+
+def test_fault_exhausted_retries_surface(ctx_2bit, engine_2bit):
+    def always_fail(request, attempt):
+        raise RuntimeError("poisoned request")
+
+    rt = ServeRuntime(ctx_2bit, engine_2bit, fused=False,
+                      fault=FaultConfig(max_retries=1),
+                      fault_hook=always_fail)
+    g = _linear_graph(0)
+    x = ctx_2bit.encrypt(jax.random.key(7), np.array([0]))
+    h = rt.submit(g, [x])
+    rt.drain()
+    with pytest.raises(RuntimeError, match="poisoned"):
+        h.wait(timeout=5)
+    assert rt.stats["failed"] == 1
