@@ -26,8 +26,9 @@ def _bench(fn, *args, reps=3):
 def run() -> list:
     import jax
     import jax.numpy as jnp
+    from repro.api import IntSpec, Session
     from repro.core.engine import TaurusEngine
-    from repro.core.integer import (IntegerContext, carry_table, msg_table)
+    from repro.core.integer import carry_table, msg_table
     from repro.core.params import TEST_PARAMS, TEST_PARAMS_4BIT
     from repro.core.pbs import TFHEContext
 
@@ -38,7 +39,10 @@ def run() -> list:
     for params, bits in ((TEST_PARAMS, 16), (TEST_PARAMS_4BIT, 16)):
         ctx = TFHEContext.create(jax.random.PRNGKey(0), params)
         eng = TaurusEngine.from_context(ctx)
-        ic = IntegerContext.create(ctx, eng, pad_batches=False)
+        # eager backend: direct IntegerContext, unpadded rounds (the
+        # microbench measures raw round cost, not shape reuse)
+        sess = Session(ctx, eng, backend="eager", pad_batches=False)
+        ic = sess.backend.int_ctx
         a = ic.encrypt(jax.random.PRNGKey(1), 0xBEEF, bits)
         b = ic.encrypt(jax.random.PRNGKey(2), 0x1234, bits)
         spec = a.spec
@@ -58,14 +62,18 @@ def run() -> list:
                     "digits": d, "round_batched_ms": t_b * 1e3,
                     "round_xpu_ms": t_x * 1e3, "digits_per_s": d / t_b,
                     "reuse_gain": t_x / t_b})
-        # end-to-end ops (carry strategy auto: ripple at width 2, prefix
-        # at width >= 4)
-        for opname, fn in (("add", ic.add), ("mul", ic.mul)):
-            fn(a, b)                       # compile + warm
+        # end-to-end ops as TRACED programs through the api front door
+        # (carry strategy auto: lookahead/ripple at width 2, prefix at
+        # width >= 4) — the same Program would run on "local"/"serve"
+        enc = [a.digits, b.digits]
+        for opname, fn in (("add", lambda x, y: x + y),
+                           ("mul", lambda x, y: x * y)):
+            prog = sess.trace(fn, IntSpec(bits), IntSpec(bits))
+            sess.run(prog, enc)            # compile + warm
             ic.reset_stats()
             t0 = time.perf_counter()
-            res = fn(a, b)
-            res.digits.block_until_ready()
+            res = sess.run(prog, enc)[0]
+            res.block_until_ready()
             dt = time.perf_counter() - t0
             print(f"  {opname}{bits}: {dt * 1e3:9.1f} ms, "
                   f"{ic.stats['lut_batches']} batches, "

@@ -22,6 +22,10 @@ ALL = ["fig5", "table2", "table4", "fig13", "fig15", "dedup", "engine",
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="import every benchmark module and resolve its "
+                         "run() entry point without executing (CI: keeps "
+                         "the entry points from bit-rotting)")
     args = ap.parse_args(argv)
     which = args.only.split(",") if args.only else ALL
 
@@ -34,6 +38,12 @@ def main(argv=None):
             "fig15": fig15_utilization, "dedup": dedup_stats,
             "engine": engine_wallclock, "radix": radix_throughput,
             "serve": serve_throughput}
+
+    if args.dry_run:
+        bad = [n for n in which if not callable(getattr(mods[n], "run", None))]
+        print(f"[benchmarks] dry-run: {len(which)} modules importable, "
+              f"{len(bad)} missing run() {bad}")
+        return 1 if bad else 0
 
     results, failed = [], []
     for name in which:

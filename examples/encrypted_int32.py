@@ -58,6 +58,21 @@ def main():
     verdict = int(ctx.decrypt(ic.compare(ca, cb)))
     print(f"compare(a, b) = {verdict}   (0 eq / 1 lt / 2 gt; expect 2)")
 
+    # --- the same arithmetic, traced once through the api front door -------
+    # Python operators record the radix IR; the compiled program runs
+    # identically on the eager debugger and the serving interpreter.
+    from repro.api import IntSpec, Session
+
+    prog = None
+    for backend in ("eager", "local"):
+        sess = Session(ctx, ic.engine, backend=backend)
+        prog = prog or sess.trace(lambda x, y: (x + y, x * y, x < y),
+                                  IntSpec(16), IntSpec(16))
+        s2, m2, lt = sess(prog, jax.random.PRNGKey(9), a, b)
+        print(f"traced/{backend:5s}: a+b={s2}, a*b={m2}, "
+              f"[a<b]={int(lt[0])}   (expect {(a + b) % 2**16}, "
+              f"{(a * b) % 2**16}, {int(a < b)})")
+
 
 if __name__ == "__main__":
     main()

@@ -12,6 +12,7 @@ what the same graph costs on the Taurus accelerator model.
 import numpy as np
 import jax
 
+from repro.api import Session
 from repro.core.params import TEST_PARAMS_6BIT, PAPER_PARAMS
 from repro.core.pbs import TFHEContext
 from repro.fhe_ml import lower, executor
@@ -31,18 +32,21 @@ def main():
     print(f"graph: {len(g.nodes)} nodes, {n_lut} PBS applications")
 
     ctx = TFHEContext.create(jax.random.PRNGKey(42), TEST_PARAMS_6BIT)
-    ex = executor.FheExecutor(ctx)
+    # the api front door: adopt the lowered graph as a Program and run it
+    # on the eager debugging backend (swap backend="serve" to put this
+    # block behind the multi-tenant runtime, unchanged)
+    sess = Session(ctx, backend="eager")
+    prog = sess.compile(g)
     x = np.random.default_rng(0).integers(0, 8, (d,))
     print(f"input (3-bit quantized): {x}")
 
     ref = executor.interpret(g, [x], ctx.params.width)
-    enc = ex.encrypt_inputs(jax.random.PRNGKey(7), [x])
-    out = ex.run(g, enc)
-    got = ex.decrypt(out[g.outputs[0]])
+    enc = sess.encrypt_inputs(jax.random.PRNGKey(7), [x], prog)
+    got = sess.decrypt_outputs(prog, sess.run(prog, enc))[0]
     print(f"decrypted output: {got}")
     print(f"plaintext oracle: {ref[g.outputs[0]]}")
     assert np.array_equal(got, ref[g.outputs[0]]), "FHE != oracle!"
-    print(f"bit-exact ✓   engine stats: {ex.stats}")
+    print(f"bit-exact ✓   engine stats: {sess.backend.stats}")
 
     # what would Taurus do with this graph?
     ops, stats = passes.lower_to_physical(g)

@@ -1,24 +1,23 @@
-"""Multi-tenant FHE serving: concurrent clients, fused PBS rounds.
+"""Multi-tenant FHE serving through the `repro.api` front door.
 
     PYTHONPATH=src python examples/serve_requests.py
 
-Three clients submit encrypted wide-integer programs (add / sub / relu)
-to one `ServeRuntime`; one client retries a request, submitting the
-identical ciphertexts twice.  The runtime executes all of them
-concurrently: every PBS round that is ready across the in-flight
-requests fuses into ONE `TaurusEngine.lut_batch` (the bootstrapping key
-streams once per round for the whole fleet), and the retried request's
-rounds dedup against its twin — zero marginal bootstraps.
+Three clients trace encrypted wide-integer programs (add / sub / relu)
+with ONE `Session` and submit them to its `ServeBackend`; one client
+retries a request, submitting the identical ciphertexts twice.  The
+runtime executes all of them concurrently: every PBS round that is
+ready across the in-flight requests fuses into ONE
+`TaurusEngine.lut_batch` (the bootstrapping key streams once per round
+for the whole fleet), and the retried request's rounds dedup against
+its twin — zero marginal bootstraps.  The same traced programs run
+unchanged on `backend="eager"` or `"local"` for debugging.
 """
 import jax
 
+from repro.api import IntSpec, Session
 from repro.core.engine import TaurusEngine
-from repro.core.integer import IntegerContext
 from repro.core.params import TEST_PARAMS_4BIT
 from repro.core.pbs import TFHEContext
-from repro.serve import (ServeRuntime, decrypt_radix_output,
-                         encrypt_request_inputs, radix_binop_program,
-                         radix_unop_program)
 
 BITS = 8
 
@@ -27,29 +26,32 @@ def main():
     params = TEST_PARAMS_4BIT
     ctx = TFHEContext.create(jax.random.PRNGKey(0), params)
     engine = TaurusEngine.from_context(ctx)
-    ic = IntegerContext.create(ctx, engine)      # client-side crypto
+    sess = Session(ctx, engine, backend="serve",
+                   max_inflight=4, start_paused=True)
 
-    add = radix_binop_program("radix_add", BITS, ic.spec(BITS).msg_bits)
-    sub = radix_binop_program("radix_sub", BITS, ic.spec(BITS).msg_bits)
-    relu = radix_unop_program("radix_relu", BITS, ic.spec(BITS).msg_bits)
+    add = sess.trace(lambda a, b: a + b, IntSpec(BITS), IntSpec(BITS))
+    sub = sess.trace(lambda a, b: a - b, IntSpec(BITS), IntSpec(BITS))
+    relu = sess.trace(lambda a: a.relu(), IntSpec(BITS))
 
-    enc = lambda key, vals: encrypt_request_inputs(ic, key, vals, BITS)
     k = jax.random.split(jax.random.PRNGKey(1), 4)
     jobs = [
-        ("alice", add, enc(k[0], [173, 209]), (173 + 209) % 256),
-        ("bob",   sub, enc(k[1], [60, 77]),   (60 - 77) % 256),
-        ("carol", relu, enc(k[2], [-5]),      0),
+        ("alice", add, sess.encrypt_inputs(k[0], [173, 209], add),
+         (173 + 209) % 256),
+        ("bob", sub, sess.encrypt_inputs(k[1], [60, 77], sub),
+         (60 - 77) % 256),
+        ("carol", relu, sess.encrypt_inputs(k[2], [-5], relu), 0),
     ]
     # alice's client retries her request: identical ciphertexts resubmitted
     jobs.append(("alice", add, jobs[0][2], jobs[0][3]))
 
-    rt = ServeRuntime(ctx, engine, max_inflight=4, start_paused=True)
-    handles = [rt.submit(g, e, client_id=c) for c, g, e, _ in jobs]
+    handles = [sess.submit(prog, enc, client_id=c)
+               for c, prog, enc, _ in jobs]
+    rt = sess.backend.runtime
     rt.resume()                                   # serve the whole wave
     rt.drain()
 
-    for h, (client, _, _, want) in zip(handles, jobs):
-        got = decrypt_radix_output(ic, h.outputs()[0], BITS)[0]
+    for h, (client, prog, _, want) in zip(handles, jobs):
+        got = sess.decrypt_outputs(prog, h.outputs())[0]
         ok = "ok" if got == want else "WRONG"
         print(f"  {client:6s} request {h.request.request_id}: "
               f"dec = {got:3d} (expect {want:3d}) {ok}")
@@ -61,6 +63,7 @@ def main():
           f"{s['dispatched_luts']} dispatched "
           f"(dedup hit-rate {rt.scheduler.dedup_hit_rate:.0%}, "
           f"mean occupancy {rt.scheduler.mean_occupancy:.0%})")
+    sess.close()
 
 
 if __name__ == "__main__":

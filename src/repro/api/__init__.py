@@ -1,0 +1,41 @@
+"""repro.api — one front door for eager, compiled, and served FHE.
+
+This repo grew four divergent entry points (eager `IntegerContext` ops,
+hand-built IR graphs, `fhe_ml.FheExecutor.run`, `serve.ServeRuntime
+.submit`); this package unifies them behind a single traced program
+contract, the API the rest of the roadmap (sharded scheduling,
+encrypted-LLM traffic) is written against:
+
+    from repro.api import Session, IntSpec
+
+    sess = Session(ctx, backend="local")            # or "eager" / "serve"
+    prog = sess.trace(lambda a, b: (a * b).relu(),
+                      IntSpec(16), IntSpec(16))     # operators record IR
+    enc  = sess.encrypt_inputs(key, [x, y], prog)
+    vals = sess.decrypt_outputs(prog, sess.run(prog, enc))
+
+  tracing   `EncryptedInt` / `EncryptedTensor`: Python operators
+            (+, -, *, comparisons, relu) record `radix_*`/linear/`lut`
+            nodes into a `repro.compiler.ir.Graph`.
+  session   `Session.trace` -> `Program` (graph + encrypt/decrypt
+            specs); encrypt/run/decrypt round trip.
+  backends  `Backend.execute(program, enc_inputs) -> outputs`:
+            `EagerBackend` (direct IntegerContext + KS/ACC-dedup PBS),
+            `LocalBackend` (`serve.IrInterpreter`), `ServeBackend`
+            (multi-tenant `ServeRuntime`, cross- AND intra-request
+            round fusion).  Same program, identical plaintexts on all
+            three.
+"""
+from repro.api.backends import (Backend, EagerBackend, LocalBackend,
+                                ServeBackend, eval_linear_ct_op,
+                                eval_radix_vector, make_backend)
+from repro.api.session import Program, Session, trace_program
+from repro.api.tracing import (EncryptedInt, EncryptedTensor, EncryptedValue,
+                               IntSpec, RawSpec, TensorSpec)
+
+__all__ = [
+    "Backend", "EagerBackend", "EncryptedInt", "EncryptedTensor",
+    "EncryptedValue", "IntSpec", "LocalBackend", "Program", "RawSpec",
+    "ServeBackend", "Session", "TensorSpec", "eval_linear_ct_op",
+    "eval_radix_vector", "make_backend", "trace_program",
+]

@@ -1,0 +1,197 @@
+"""The `repro.api` front door: trace once, run anywhere.
+
+A `Session` binds key material (a `TFHEContext`) to one pluggable
+`Backend` and gives every FHE workload in this repo the same three-step
+shape:
+
+    sess = Session(ctx, backend="local")
+    prog = sess.trace(lambda a, b: (a * b).relu(), IntSpec(16), IntSpec(16))
+    enc  = sess.encrypt_inputs(key, [x, y], prog)
+    out  = sess.run(prog, enc)
+    vals = sess.decrypt_outputs(prog, out)
+
+The traced `Program` is an ordinary `repro.compiler.ir.Graph` plus the
+input/output specs needed to encrypt and decrypt — the single program
+contract between the frontend and every executor.  Swapping
+`backend="eager" | "local" | "serve"` changes WHERE the graph executes
+(direct `IntegerContext`, the serving IR interpreter, or the
+multi-tenant `ServeRuntime`), never WHAT it computes: decrypted outputs
+are identical across the three (tested in `tests/test_api.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.api.tracing import (EncryptedInt, EncryptedTensor, EncryptedValue,
+                               IntSpec, RawSpec, TensorSpec, make_input)
+from repro.compiler.ir import Graph
+from repro.core.integer import IntegerContext, RadixCiphertext
+
+
+@dataclasses.dataclass
+class Program:
+    """A compiled program: the IR graph plus its encryption contract."""
+    graph: Graph
+    in_specs: list
+    out_specs: list
+
+    @classmethod
+    def from_graph(cls, graph: Graph, in_specs: Optional[list] = None,
+                   out_specs: Optional[list] = None) -> "Program":
+        """Wrap a hand-built / lowered Graph (e.g. from `repro.fhe_ml`).
+        Specs default to plain tensor/raw slots shaped like the graph's
+        input and output nodes."""
+        if in_specs is None:
+            in_specs = [TensorSpec(tuple(n.shape)) for n in graph.nodes
+                        if n.op == "input"]
+        if out_specs is None:
+            out_specs = [RawSpec(tuple(graph.nodes[o].shape))
+                         for o in graph.outputs]
+        return cls(graph, list(in_specs), list(out_specs))
+
+    @property
+    def n_inputs(self) -> int:
+        return len(self.in_specs)
+
+
+def trace_program(fn, in_specs, params=None) -> Program:
+    """Trace `fn` over input specs into a `Program`.
+
+    Session-free entry (used by `repro.serve.programs`): without
+    `params`, IntSpecs must carry explicit msg_bits and boolean
+    comparisons are unavailable (their verdict LUT needs the plaintext
+    width).
+    """
+    width = params.width if params is not None else None
+    g = Graph()
+    specs = [s.resolve(params) if isinstance(s, IntSpec) and params is not None
+             else s for s in in_specs]
+    args = [make_input(g, s, width) for s in specs]
+    out = fn(*args)
+    outs = list(out) if isinstance(out, (tuple, list)) else [out]
+    out_specs = []
+    for o in outs:
+        if not isinstance(o, (EncryptedInt, EncryptedTensor, EncryptedValue)):
+            raise TypeError(f"traced fn returned {type(o).__name__}; "
+                            "return traced encrypted values")
+        out_specs.append(o.out_spec())
+    g.outputs = [o.t.node.id for o in outs]
+    return Program(g, specs, out_specs)
+
+
+class Session:
+    """One front door for eager, compiled, and served FHE execution.
+
+    backend: "eager" | "local" | "serve", or any object implementing the
+    `Backend` protocol (`execute(program, enc_inputs) -> outputs`).
+    Extra keyword arguments are forwarded to the named backend's
+    constructor (e.g. `max_inflight=8` for "serve", `fused=True` for
+    "local").
+    """
+
+    def __init__(self, ctx, engine=None, backend="local", **backend_kw):
+        from repro.api.backends import make_backend
+        self.ctx = ctx
+        self.params = ctx.params
+        # client-side radix crypto (encrypt/decrypt only — backends own
+        # their server-side contexts)
+        self.int_ctx = IntegerContext.create(ctx, engine)
+        self.engine = self.int_ctx.engine
+        if isinstance(backend, str):
+            backend = make_backend(backend, ctx, self.engine, **backend_kw)
+        elif backend_kw:
+            raise TypeError("backend_kw only applies to named backends")
+        self.backend = backend
+
+    # -- trace / compile -----------------------------------------------------
+    def trace(self, fn, *in_specs) -> Program:
+        """Trace `fn` over the given specs into a backend-portable
+        Program.  IntSpec msg_bits defaults from this session's params."""
+        return trace_program(fn, in_specs, self.params)
+
+    def compile(self, graph: Graph, in_specs=None, out_specs=None) -> Program:
+        """Adopt an existing IR graph (e.g. a `repro.fhe_ml` lowering)."""
+        return Program.from_graph(graph, in_specs, out_specs)
+
+    # -- client-side crypto --------------------------------------------------
+    def _encrypt_one(self, key: jax.Array, spec, value) -> jax.Array:
+        if isinstance(spec, IntSpec):
+            spec = spec.resolve(self.params)
+            vals = np.asarray(value).reshape(-1)
+            assert vals.size == spec.n_ints, (
+                f"spec {spec} wants {spec.n_ints} integers, got {vals.size}")
+            cts = []
+            for sub, v in zip(jax.random.split(key, vals.size), vals):
+                cts.append(self.int_ctx.encrypt(
+                    sub, int(v), spec.bits, spec.msg_bits).digits)
+            return jax.numpy.concatenate(cts, axis=0)     # (V*D, big_n+1)
+        if isinstance(spec, (TensorSpec, RawSpec)):
+            flat = np.asarray(value).reshape(-1)
+            return self.ctx.encrypt(key, flat)
+        raise TypeError(f"cannot encrypt for spec {spec!r}")
+
+    def encrypt_inputs(self, key: jax.Array, values, program: Program) -> list:
+        """Encrypt one plaintext per program input; returns the
+        ciphertext arrays every backend consumes."""
+        assert len(values) == program.n_inputs, (
+            f"program takes {program.n_inputs} inputs, got {len(values)}")
+        out = []
+        for spec, v in zip(program.in_specs, values):
+            key, sub = jax.random.split(key)
+            out.append(self._encrypt_one(sub, spec, v))
+        return out
+
+    def _decrypt_one(self, spec, arr):
+        if isinstance(spec, IntSpec):
+            spec = spec.resolve(self.params)
+            rspec = self.int_ctx.spec(spec.bits, spec.msg_bits)
+            vecs = np.asarray(arr).reshape(-1, rspec.n_digits, arr.shape[-1])
+            ints = [self.int_ctx.decrypt(RadixCiphertext(rspec, v))
+                    for v in vecs]
+            if spec.shape == ():
+                return ints[0]
+            return np.array(ints, dtype=np.int64).reshape(spec.shape)
+        vals = np.asarray(jax.vmap(self.ctx.decrypt)(arr))
+        return vals.reshape(spec.shape)
+
+    def decrypt_outputs(self, program: Program, outputs) -> list:
+        """Decrypt backend outputs back to Python ints / numpy arrays."""
+        return [self._decrypt_one(s, a)
+                for s, a in zip(program.out_specs, outputs)]
+
+    # -- execution -----------------------------------------------------------
+    def run(self, program: Program, enc_inputs: list) -> list:
+        """Execute on this session's backend; returns the output
+        ciphertext arrays in `program.graph.outputs` order."""
+        return self.backend.execute(program, enc_inputs)
+
+    def submit(self, program: Program, enc_inputs: list,
+               client_id: Optional[str] = None):
+        """Async submit (serve backend): returns the request handle.
+        client_id defaults to the backend's configured identity."""
+        submit = getattr(self.backend, "submit", None)
+        if submit is None:
+            raise TypeError(
+                f"backend {getattr(self.backend, 'name', self.backend)!r} "
+                "is synchronous — use run(), or Session(backend='serve')")
+        return submit(program, enc_inputs, client_id=client_id)
+
+    def __call__(self, program: Program, key: jax.Array, *values) -> list:
+        """Convenience: encrypt -> run -> decrypt in one call."""
+        enc = self.encrypt_inputs(key, list(values), program)
+        return self.decrypt_outputs(program, self.run(program, enc))
+
+    def close(self) -> None:
+        close = getattr(self.backend, "close", None)
+        if close is not None:
+            close()
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -39,26 +39,76 @@ def _ceil_log2(n: int) -> int:
     return max(0, (n - 1).bit_length())
 
 
-def radix_round_plan(op: str, n_digits: int) -> list:
-    """Batched-PBS rounds of one radix op over a D-digit vector (prefix
-    carry strategy of `IntegerContext`).  Each round is a dict:
+def radix_round_plan(op: str, n_digits: int, msg_bits: Optional[int] = None,
+                     width: Optional[int] = None) -> list:
+    """Batched-PBS rounds of one radix op over a D-digit vector,
+    mirroring the carry strategy `IntegerContext.propagate` auto-selects.
+    Each round is a dict:
       luts     PBS applications in the round's single batch
       sources  distinct input ciphertexts feeding those LUTs (the
                key-switch count after KS-dedup: fanout shares one KS)
       tables   symbolic accumulator-table ids (ACC-dedup keys)
       macs     LPU MACs of the round's linear stitch-up
+
+    msg_bits selects the carry strategy the runtime will take: the
+    runtime decides on the parameter set's plaintext window, which the
+    params-free IR does not know, so the model assumes the standard
+    width = 2*msg_bits layout unless `width` is given explicitly.
+    Wide windows (msg_bits >= 2 / width >= 4, or msg_bits None — the
+    historical default) take the packed Hillis-Steele prefix scan;
+    narrow windows take the two-level carry-lookahead scan where
+    2 + 2*ceil(log2 D) beats D, else ripple.  (Base-2 programs were
+    previously costed with the prefix plan, which under-counted their
+    rounds.)  Single-digit vectors are one ripple extraction round for
+    every strategy, exactly like the runtime.
     """
     d = n_digits
 
+    def ripple_plan(rounds):
+        return [{"luts": 2 * d, "sources": d,
+                 "tables": ("radix/msg", "radix/carry"), "macs": d}
+                for _ in range(rounds)]
+
     def add_plan():
-        rounds = [{"luts": 2 * d, "sources": d,
-                   "tables": ("radix/msg", "radix/sigma"), "macs": d}]
-        for _ in range(_ceil_log2(d)):
+        if d == 1:
+            return ripple_plan(1)
+        if width is not None:
+            narrow = width < 4
+        else:
+            narrow = msg_bits == 1        # standard width = 2*msg_bits
+        if not narrow:
+            rounds = [{"luts": 2 * d, "sources": d,
+                       "tables": ("radix/msg", "radix/sigma"), "macs": d}]
+            for _ in range(_ceil_log2(d)):
+                rounds.append({"luts": d, "sources": d,
+                               "tables": ("radix/combine",), "macs": d})
             rounds.append({"luts": d, "sources": d,
-                           "tables": ("radix/combine",), "macs": d})
-        rounds.append({"luts": d, "sources": d,
-                       "tables": ("radix/msg",), "macs": d})
-        return rounds
+                           "tables": ("radix/msg",), "macs": d})
+            return rounds
+        if 2 + 2 * _ceil_log2(d) < d:
+            # two-level lookahead: status kept as (generate, propagate)
+            # bit pairs, each scan level two batched bit-logic rounds
+            rounds = [{"luts": 3 * d, "sources": d,
+                       "tables": ("radix/msg", "radix/generate",
+                                  "radix/propagate"), "macs": d}]
+            dd = 1
+            while dd < d:
+                k = d - dd
+                # round A: AND terms + propagate combine; lanes below the
+                # scan distance refresh through the bit identity.  Every
+                # row is a fresh LPU combination -> no KS sharing.
+                rounds.append({"luts": 2 * k + dd, "sources": 2 * k + dd,
+                               "tables": ("radix/bit_and", "radix/bit_or"),
+                               "macs": 2 * k})
+                # round B: fold the lookahead term into generate
+                rounds.append({"luts": d, "sources": d,
+                               "tables": ("radix/bit_or",), "macs": k})
+                dd *= 2
+            rounds.append({"luts": d, "sources": d,
+                           "tables": ("radix/msg",), "macs": d})
+            return rounds
+        # ripple: D batched (msg, carry) extraction rounds
+        return ripple_plan(d)
 
     if op in ("radix_add", "radix_sub"):
         return add_plan()
@@ -142,7 +192,8 @@ class Graph:
             if n.op in RADIX_OPS:
                 total += radix_vectors(n) * sum(
                     r["luts"]
-                    for r in radix_round_plan(n.op, n.attrs["n_digits"]))
+                    for r in radix_round_plan(n.op, n.attrs["n_digits"],
+                                              n.attrs.get("msg_bits")))
         return total
 
 

@@ -59,7 +59,8 @@ def _levels(g: Graph) -> dict:
     the schedule."""
     lvl = {}
     for n in g.nodes:
-        depth = (len(radix_round_plan(n.op, n.attrs["n_digits"]))
+        depth = (len(radix_round_plan(n.op, n.attrs["n_digits"],
+                                      n.attrs.get("msg_bits")))
                  if n.op in RADIX_OPS else 1)
         lvl[n.id] = depth + max((lvl[i] for i in n.inputs), default=-1)
     return lvl
@@ -141,7 +142,8 @@ def lower_to_physical(g: Graph, *, ks_dedup: bool = True,
             # switches down to `sources` — the digit-batch analogue of the
             # tensor-fanout dedup above.
             vecs = radix_vectors(n)
-            plan = radix_round_plan(n.op, n.attrs["n_digits"])
+            plan = radix_round_plan(n.op, n.attrs["n_digits"],
+                                    n.attrs.get("msg_bits"))
             base_lvl = lvl[n.id] - len(plan) + 1
             for r, rd in enumerate(plan):
                 luts = rd["luts"] * vecs

@@ -122,12 +122,29 @@ def make_lut_polys(tables: jax.Array, params: TFHEParams) -> jax.Array:
 _ROW_POLY_CACHE: dict = {}
 _ROW_POLY_CACHE_MAX = 4096
 _ROW_POLY_LOCK = threading.Lock()
+# observability: unique-row hits/misses per lookup plus evictions, so
+# tests (and serving dashboards) can assert cross-context reuse
+_ROW_POLY_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def row_poly_cache_stats() -> dict:
+    """Snapshot of the process-wide LUT-poly cache counters."""
+    with _ROW_POLY_LOCK:
+        return dict(_ROW_POLY_STATS)
+
+
+def clear_row_poly_cache() -> None:
+    """Drop every cached row and reset the counters (test isolation)."""
+    with _ROW_POLY_LOCK:
+        _ROW_POLY_CACHE.clear()
+        _ROW_POLY_STATS.update(hits=0, misses=0, evictions=0)
 
 
 def _cache_put(key, poly) -> None:
     with _ROW_POLY_LOCK:
         while len(_ROW_POLY_CACHE) >= _ROW_POLY_CACHE_MAX:
             _ROW_POLY_CACHE.pop(next(iter(_ROW_POLY_CACHE)), None)
+            _ROW_POLY_STATS["evictions"] += 1
         _ROW_POLY_CACHE[key] = poly
 
 
@@ -143,10 +160,12 @@ def make_lut_polys_cached(tables, params: TFHEParams) -> jax.Array:
         if k not in order:
             order[k] = i
     # snapshot hits locally (under the lock) so concurrent eviction can't
-    # race the gather below
+    # race the gather below; counters are per UNIQUE row per lookup
     with _ROW_POLY_LOCK:
         local = {k: _ROW_POLY_CACHE[(params, k)] for k in order
                  if (params, k) in _ROW_POLY_CACHE}
+        _ROW_POLY_STATS["hits"] += len(local)
+        _ROW_POLY_STATS["misses"] += len(order) - len(local)
     missing = [k for k in order if k not in local]
     if missing:
         polys = make_lut_polys(

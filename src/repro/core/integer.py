@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -263,6 +264,10 @@ class IntegerContext:
     stats: dict = dataclasses.field(default_factory=lambda: {
         "pbs": 0, "lut_batches": 0, "batch_sizes": [], "dispatch_sizes": []})
     _poly_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+    # stats counters are read-modify-write; the serving fan-out runs
+    # several vector threads through ONE context, so guard them
+    _stats_lock: object = dataclasses.field(
+        default_factory=threading.Lock, repr=False)
 
     @classmethod
     def create(cls, ctx: TFHEContext, engine: TaurusEngine | None = None,
@@ -277,8 +282,9 @@ class IntegerContext:
         return RadixSpec.create(self.params, bits, msg_bits)
 
     def reset_stats(self) -> None:
-        self.stats.update(pbs=0, lut_batches=0, batch_sizes=[],
-                          dispatch_sizes=[])
+        with self._stats_lock:
+            self.stats.update(pbs=0, lut_batches=0, batch_sizes=[],
+                              dispatch_sizes=[])
 
     # -- client side --------------------------------------------------------
     def encrypt(self, key: jax.Array, value: int, bits: int,
@@ -319,10 +325,11 @@ class IntegerContext:
                 dispatch = jnp.tile(cts, (reps, 1))[:p]
                 dtables = np.tile(tables, (reps, 1))[:p]
         out = self.engine.lut_batch(dispatch, self._polys(dtables))
-        self.stats["lut_batches"] += 1
-        self.stats["pbs"] += b
-        self.stats["batch_sizes"].append(b)
-        self.stats["dispatch_sizes"].append(int(dispatch.shape[0]))
+        with self._stats_lock:
+            self.stats["lut_batches"] += 1
+            self.stats["pbs"] += b
+            self.stats["batch_sizes"].append(b)
+            self.stats["dispatch_sizes"].append(int(dispatch.shape[0]))
         return out[:b]
 
     def _polys(self, tables: np.ndarray) -> jax.Array:

@@ -1,38 +1,69 @@
-"""Execute FHE IR graphs — plaintext integer oracle + real encrypted run.
+"""Plaintext oracle for FHE IR graphs + the legacy executor shim.
 
 `interpret(graph, inputs, width)` is the integer-semantics oracle (every
-value lives mod 2^width, exactly like the torus encoding).
+value lives mod 2^width, exactly like the torus encoding; radix nodes
+operate on digit vectors mod 2^bits).
 
-`FheExecutor` runs the same graph on REAL TFHE ciphertexts through the
-batched TaurusEngine, with both compiler optimizations live:
-  * KS-dedup — key-switch results cached per source node and reused by
-    every LUT that reads that node (the engine counts them);
-  * ACC-dedup — one GLWE test polynomial per unique table, shared across
-    all ciphertext elements that apply it.
+The real encrypted execution moved behind the `repro.api` front door:
+`repro.api.EagerBackend` is the KS/ACC-dedup executor that used to live
+here, and `Session(ctx, backend=...)` runs the same graph eagerly,
+through the serving interpreter, or through the multi-tenant runtime.
+`FheExecutor` remains as a deprecation shim over `EagerBackend` so
+existing callers keep working.
 """
 from __future__ import annotations
+
+import warnings
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
-from repro.compiler.ir import Graph
-from repro.core import glwe, lwe, torus
-from repro.core import batch as batch_mod
-from repro.core.params import TFHEParams
-
-U64 = jnp.uint64
+# Shared node evaluator: real home is repro.api.backends; re-exported
+# here for the callers that predate the front door.
+from repro.api.backends import EagerBackend, eval_linear_ct_op  # noqa: F401
+from repro.compiler.ir import Graph, RADIX_OPS
 
 
 # --------------------------------------------------------------------------
 # plaintext integer oracle (defines correctness)
 # --------------------------------------------------------------------------
 
+def _interpret_radix(n, vals: dict) -> np.ndarray:
+    """Integer semantics of one radix node: recombine digit vectors,
+    apply the op mod 2^bits, re-digitize (cmp yields verdicts)."""
+    m, d = n.attrs["msg_bits"], n.attrs["n_digits"]
+    base, mod = 1 << m, 1 << (m * d)
+    a = np.asarray(vals[n.inputs[0]]).reshape(-1, d)
+    ints_a = [sum(int(dig) << (i * m) for i, dig in enumerate(vec)) % mod
+              for vec in a]
+    ints_b = None
+    if len(n.inputs) == 2:
+        b = np.asarray(vals[n.inputs[1]]).reshape(-1, d)
+        ints_b = [sum(int(dig) << (i * m) for i, dig in enumerate(vec)) % mod
+                  for vec in b]
+    if n.op == "radix_cmp":
+        return np.array([0 if x == y else (1 if x < y else 2)
+                         for x, y in zip(ints_a, ints_b)], np.int64)
+    if n.op == "radix_add":
+        res = [(x + y) % mod for x, y in zip(ints_a, ints_b)]
+    elif n.op == "radix_sub":
+        res = [(x - y) % mod for x, y in zip(ints_a, ints_b)]
+    elif n.op == "radix_mul":
+        res = [(x * y) % mod for x, y in zip(ints_a, ints_b)]
+    elif n.op == "radix_relu":
+        res = [0 if x >= mod // 2 else x for x in ints_a]
+    else:
+        raise ValueError(n.op)
+    return np.array([(v >> (i * m)) & (base - 1)
+                     for v in res for i in range(d)], np.int64)
+
+
 def interpret(g: Graph, inputs: list, width: int,
               check_range: bool = True) -> dict:
-    """inputs: list of int arrays (flattened per input node).
-    Returns {node_id: int array} for every node, values mod 2^width.
+    """inputs: list of int arrays (flattened per input node; radix
+    inputs are little-endian digit values).  Returns {node_id: int
+    array} for every node, values mod 2^width.
 
     check_range enforces the Concrete compile-time guarantee: every value
     ENTERING a LUT must lie in [0, 2^width) *before* wrapping — outside
@@ -73,6 +104,8 @@ def interpret(g: Graph, inputs: list, width: int,
                     f"negacyclically — resize weights/activation widths")
             t = np.asarray(n.attrs["table"], np.int64)
             vals[n.id] = t[v % mod] % mod
+        elif n.op in RADIX_OPS:
+            vals[n.id] = _interpret_radix(n, vals)
         elif n.op in ("reshape", "concat"):
             vals[n.id] = vals[n.inputs[0]]
         else:
@@ -81,61 +114,29 @@ def interpret(g: Graph, inputs: list, width: int,
 
 
 # --------------------------------------------------------------------------
-# encrypted executor
+# legacy executor — deprecation shim over repro.api.EagerBackend
 # --------------------------------------------------------------------------
 
-def eval_linear_ct_op(n, vals: dict, p: TFHEParams):
-    """Evaluate one PBS-free IR node on ciphertext tensors (LPU work:
-    add/sub/addc/mulc/linear/reshape/concat).  Returns the result array,
-    or None if `n` is not a linear op.  Shared by `FheExecutor` and
-    `repro.serve.IrInterpreter` so their linear semantics cannot
-    diverge."""
-    delta = p.delta
-    if n.op == "add":
-        return lwe.add(vals[n.inputs[0]], vals[n.inputs[1]])
-    if n.op == "sub":
-        return lwe.sub(vals[n.inputs[0]], vals[n.inputs[1]])
-    if n.op == "addc":
-        c = torus.encode(jnp.asarray(
-            np.asarray(n.attrs["const"], np.int64).reshape(-1)
-            % (1 << p.width), dtype=U64), delta)
-        x = vals[n.inputs[0]]
-        c = jnp.broadcast_to(c, x.shape[:-1])
-        return x.at[..., -1].add(c)
-    if n.op == "mulc":
-        c = np.asarray(n.attrs["const"], np.int64).reshape(-1)
-        return vals[n.inputs[0]] * jnp.asarray(
-            c, jnp.int64)[:, None].astype(U64)
-    if n.op == "linear":
-        W = jnp.asarray(np.asarray(n.attrs["W"], np.int64))
-        x = vals[n.inputs[0]]                      # (in, big_n+1)
-        y = jnp.einsum("io,id->od", W.astype(U64), x)
-        if n.attrs.get("bias") is not None:
-            b = torus.encode(jnp.asarray(
-                np.asarray(n.attrs["bias"], np.int64).reshape(-1)
-                % (1 << p.width), U64), delta)
-            y = y.at[..., -1].add(b)
-        return y
-    if n.op in ("reshape", "concat"):
-        return vals[n.inputs[0]]
-    return None
-
-
 class FheExecutor:
-    """Runs a graph on real ciphertexts via the batched engine."""
+    """Deprecated: construct `repro.api.Session(ctx, backend="eager")`
+    (or `repro.api.EagerBackend` directly).  This shim forwards to
+    `EagerBackend` and preserves the historical surface (`run` returning
+    {node_id: array}, `stats`, `encrypt_inputs`, `decrypt`)."""
 
     def __init__(self, ctx, *, ks_dedup: bool = True, acc_dedup: bool = True):
-        self.ctx = ctx                      # TFHEContext (keys + params)
-        self.params: TFHEParams = ctx.params
-        self.ks_dedup = ks_dedup
-        self.acc_dedup = acc_dedup
-        self.stats = {"pbs": 0, "keyswitch": 0, "lut_polys": 0}
-        self._lut_cache: dict = {}
+        self.ctx = ctx
+        self.params = ctx.params
+        self._backend = EagerBackend(ctx, ks_dedup=ks_dedup,
+                                     acc_dedup=acc_dedup)
+
+    @property
+    def stats(self) -> dict:
+        return self._backend.stats
 
     # -- client side --------------------------------------------------------
     def encrypt_inputs(self, key: jax.Array, inputs: list) -> list:
         out = []
-        for i, arr in enumerate(inputs):
+        for arr in inputs:
             key, sub = jax.random.split(key)
             out.append(self.ctx.encrypt(sub, np.asarray(arr).reshape(-1)))
         return out
@@ -143,47 +144,10 @@ class FheExecutor:
     def decrypt(self, ct):
         return np.asarray(self.ctx.decrypt(ct))
 
-    # -- helpers --------------------------------------------------------------
-    def _lut_poly(self, table: np.ndarray):
-        key = table.tobytes() if self.acc_dedup else object()
-        if key not in self._lut_cache:
-            self._lut_cache[key] = glwe.make_lut_poly(
-                jnp.asarray(table, U64), self.params)
-            self.stats["lut_polys"] += 1
-        return self._lut_cache[key]
-
-    def _pbs(self, cts, table, small_cache_key, ks_cache):
-        """PBS with the KS-first order so key-switch results are reusable."""
-        p = self.params
-        if self.ks_dedup and small_cache_key in ks_cache:
-            small = ks_cache[small_cache_key]
-        else:
-            small = batch_mod.keyswitch_batch(cts, self.ctx.ksk, p)
-            self.stats["keyswitch"] += int(cts.shape[0])
-            ks_cache[small_cache_key] = small
-        ms = lwe.mod_switch(small, p.log2_N + 1)
-        poly = self._lut_poly(table)
-        luts = glwe.trivial(jnp.broadcast_to(poly, (cts.shape[0], p.N)), p.k)
-        acc = batch_mod.blind_rotate_batch(luts, ms, self.ctx.bsk_f, p)
-        self.stats["pbs"] += int(cts.shape[0])
-        return glwe.sample_extract(acc)
-
     # -- run ------------------------------------------------------------------
     def run(self, g: Graph, enc_inputs: list) -> dict:
-        vals: dict = {}
-        ks_cache: dict = {}
-        it = iter(enc_inputs)
-        for n in g.nodes:
-            if n.op == "input":
-                vals[n.id] = next(it)
-                continue
-            out = eval_linear_ct_op(n, vals, self.params)
-            if out is not None:
-                vals[n.id] = out
-            elif n.op == "lut":
-                vals[n.id] = self._pbs(vals[n.inputs[0]],
-                                       np.asarray(n.attrs["table"]),
-                                       n.inputs[0], ks_cache)
-            else:
-                raise ValueError(n.op)
-        return vals
+        warnings.warn(
+            "FheExecutor.run is deprecated — use repro.api.Session"
+            "(ctx, backend='eager') / EagerBackend.run",
+            DeprecationWarning, stacklevel=2)
+        return self._backend.run(g, enc_inputs)

@@ -44,12 +44,14 @@ from repro.serve.programs import (decrypt_radix_output,
                                   encrypt_request_inputs,
                                   radix_binop_program, radix_unop_program)
 from repro.serve.runtime import (AdmissionError, RequestHandle,
-                                 ServeRequest, ServeRuntime)
+                                 RuntimeClosedError, ServeRequest,
+                                 ServeRuntime, SubmitValidationError)
 from repro.serve.scheduler import FusedEngineProxy, FusedLutScheduler
 
 __all__ = [
     "AdmissionError", "FusedEngineProxy", "FusedLutScheduler",
-    "IrInterpreter", "RequestHandle", "ServeRequest", "ServeRuntime",
+    "IrInterpreter", "RequestHandle", "RuntimeClosedError",
+    "ServeRequest", "ServeRuntime", "SubmitValidationError",
     "decrypt_radix_output", "encrypt_request_inputs",
     "radix_binop_program", "radix_unop_program",
 ]

@@ -2,36 +2,38 @@
 ciphertexts through an engine's batched PBS entry point.
 
 This is the serving-side execution contract the compiler lowers to.  It
-differs from `repro.fhe_ml.executor.FheExecutor` in two ways that matter
-for a multi-tenant runtime:
+differs from `repro.api.EagerBackend` in two ways that matter for a
+multi-tenant runtime:
 
   * every bootstrap goes through `engine.lut_batch` — hand it a
     `FusedEngineProxy` and all of a request's PBS rounds fuse with every
     other in-flight request's rounds (cross-request key reuse + dedup);
-  * it executes the `radix_*` wide-integer ops that the compiler
-    previously only lowered for scheduling/cost, by dispatching each
-    digit vector through `IntegerContext` (ROADMAP: executor
-    integration).
+  * a tensor-level radix node over V > 1 digit vectors FLATTENS into V
+    per-vector round streams executed on concurrent worker threads, each
+    registered with the shared `FusedLutScheduler` — so the vectors of
+    ONE request fuse with each other (intra-request fusion) exactly the
+    way concurrent requests already do, and the scheduler's dedup/
+    padding applies unchanged (ROADMAP serve-layer follow-up).
 
-A radix node's tensor has its digit vector on the LAST axis; the
-interpreter executes one `IntegerContext` op per leading-axis vector.
-(Batching the vectors of one tensor into shared rounds is a recorded
-serve-layer follow-up — cross-request fusion already recovers the
-occupancy for the serving path.)
+A radix node's tensor has its digit vector on the LAST axis; each
+vector executes through `IntegerContext`
+(`repro.api.backends.eval_radix_vector`, shared with the eager backend
+so the radix semantics has one definition).
 """
 from __future__ import annotations
 
+import threading
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.backends import eval_linear_ct_op, eval_radix_vector
 from repro.compiler.ir import Graph, RADIX_OPS
 from repro.core import glwe
 from repro.core.engine import TaurusEngine
-from repro.core.integer import IntegerContext, RadixCiphertext
-from repro.fhe_ml.executor import eval_linear_ct_op
+from repro.core.integer import IntegerContext
 
 
 class IrInterpreter:
@@ -39,10 +41,23 @@ class IrInterpreter:
 
     `engine` is a TaurusEngine or a `FusedEngineProxy`; with a proxy,
     per-round padding is left to the fused scheduler (padding tiny
-    per-request rounds would only dilute the fused batch)."""
+    per-request rounds would only dilute the fused batch).
+
+    intra_fuse: with a fused engine, execute the V vectors of one
+    tensor-level radix node on V concurrent threads (each holding its
+    own scheduler registration) so their identical round schedules
+    barrier into shared batches.
+
+    holds_slot: True when the calling thread itself holds a scheduler
+    registration (a `ServeRuntime` worker) — the vector fan-out then
+    parks that slot while it joins, so the barrier never waits on a
+    thread that is not computing rounds.
+    """
 
     def __init__(self, ctx, engine=None, *,
-                 pad_rounds: Optional[bool] = None):
+                 pad_rounds: Optional[bool] = None,
+                 intra_fuse: bool = True,
+                 holds_slot: bool = False):
         self.ctx = ctx
         self.engine = engine if engine is not None \
             else TaurusEngine.from_context(ctx)
@@ -51,6 +66,8 @@ class IrInterpreter:
             pad_rounds = not getattr(self.engine, "fused", False)
         self.int_ctx = IntegerContext(ctx, self.engine,
                                       pad_batches=pad_rounds)
+        self.intra_fuse = intra_fuse
+        self.holds_slot = holds_slot
         self._poly_cache: dict = {}
 
     # -- helpers -------------------------------------------------------------
@@ -61,6 +78,64 @@ class IrInterpreter:
                 np.asarray(table)[None], self.params)[0]
         return self._poly_cache[key]
 
+    # upper bound on fan-out threads per radix node: beyond this, each
+    # worker takes a contiguous slice of vectors sequentially (rounds
+    # still fuse MAX_FANOUT wide; unbounded V-wide threading would risk
+    # thread exhaustion and stack churn on large tensors)
+    MAX_FANOUT = 32
+
+    def _radix_fanout(self, n, spec, a: jax.Array,
+                      b: Optional[jax.Array], sched) -> list:
+        """Per-vector rounds on concurrent threads sharing `sched`: the
+        scheduler barrier fuses them like independent requests."""
+        V = int(a.shape[0])
+        outs: list = [None] * V
+        errors: list = []
+        nt = min(V, self.MAX_FANOUT)
+        slices = [range(w, V, nt) for w in range(nt)]
+
+        def work(idx) -> None:
+            try:
+                for v in idx:
+                    outs[v] = eval_radix_vector(
+                        self.int_ctx, n.op, spec, a[v],
+                        None if b is None else b[v])
+            except BaseException as err:  # noqa: BLE001 — re-raised below
+                errors.append(err)
+            finally:
+                sched.unregister()
+
+        threads = [threading.Thread(target=work, args=(idx,), daemon=True)
+                   for idx in slices]
+        # register every worker BEFORE any starts so the barrier width is
+        # right from the first round; a started thread owns its slot (the
+        # finally above releases it), slots of never-started threads are
+        # released here so a start() failure can't inflate the barrier
+        # forever
+        for _ in threads:
+            sched.register()
+        started = 0
+        try:
+            for t in threads:
+                t.start()
+                started += 1
+        finally:
+            for _ in range(len(threads) - started):
+                sched.unregister()
+            # park the request's own slot while joining (this thread
+            # computes no rounds meanwhile)
+            if self.holds_slot:
+                sched.unregister()
+            try:
+                for t in threads[:started]:
+                    t.join()
+            finally:
+                if self.holds_slot:
+                    sched.register()
+        if errors:
+            raise errors[0]
+        return outs
+
     def _radix(self, n, vals) -> jax.Array:
         m, d = n.attrs["msg_bits"], n.attrs["n_digits"]
         ic = self.int_ctx
@@ -70,22 +145,13 @@ class IrInterpreter:
         b = None
         if len(n.inputs) == 2:
             b = vals[n.inputs[1]].reshape(-1, d, width)
-        outs = []
-        for v in range(a.shape[0]):
-            ra = RadixCiphertext(spec, a[v])
-            if n.op == "radix_add":
-                r = ic.add(ra, RadixCiphertext(spec, b[v])).digits
-            elif n.op == "radix_sub":
-                r = ic.sub(ra, RadixCiphertext(spec, b[v])).digits
-            elif n.op == "radix_mul":
-                r = ic.mul(ra, RadixCiphertext(spec, b[v])).digits
-            elif n.op == "radix_relu":
-                r = ic.relu_clamp(ra).digits
-            elif n.op == "radix_cmp":
-                r = ic.compare(ra, RadixCiphertext(spec, b[v]))[None]
-            else:
-                raise ValueError(n.op)
-            outs.append(r)
+        sched = getattr(self.engine, "_scheduler", None)
+        if self.intra_fuse and sched is not None and a.shape[0] > 1:
+            outs = self._radix_fanout(n, spec, a, b, sched)
+        else:
+            outs = [eval_radix_vector(ic, n.op, spec, a[v],
+                                      None if b is None else b[v])
+                    for v in range(a.shape[0])]
         return jnp.concatenate(outs, axis=0)
 
     # -- run ------------------------------------------------------------------

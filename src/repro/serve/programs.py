@@ -1,38 +1,44 @@
 """Client-side program builders for the serving runtime.
 
-Traces small wide-integer programs into `repro.compiler.ir` graphs and
-encrypts/decrypts their radix inputs/outputs.  A client keeps the secret
-key; the runtime only ever sees the compiled graph and big-key digit
-ciphertexts.
+Thin compatibility wrappers over the `repro.api` tracing front door:
+the graphs are built by `repro.api.trace_program` from `EncryptedInt`
+operator traces, so a program submitted to `ServeRuntime` is the SAME
+object a `Session` traces — one program contract for every execution
+path.  A client keeps the secret key; the runtime only ever sees the
+compiled graph and big-key digit ciphertexts.
 """
 from __future__ import annotations
 
 import jax
 import numpy as np
 
-from repro.compiler.ir import Graph, trace
+from repro.api.session import trace_program
+from repro.api.tracing import IntSpec
+from repro.compiler.ir import Graph
 from repro.core.integer import IntegerContext, RadixCiphertext
+
+_BINOPS = {
+    "radix_add": lambda a, b: a + b,
+    "radix_sub": lambda a, b: a - b,
+    "radix_mul": lambda a, b: a * b,
+    "radix_cmp": lambda a, b: a.cmp(b),
+}
+
+_UNOPS = {
+    "radix_relu": lambda a: a.relu(),
+}
 
 
 def radix_binop_program(op: str, bits: int, msg_bits: int) -> Graph:
     """Graph of one radix binary op (radix_add/sub/mul/cmp) over two
     D-digit vectors."""
-    d = bits // msg_bits
-
-    def fn(a, b):
-        return getattr(a, op)(b, msg_bits=msg_bits)
-
-    return trace(fn, (d,), (d,))
+    spec = IntSpec(bits, msg_bits)
+    return trace_program(_BINOPS[op], (spec, spec)).graph
 
 
 def radix_unop_program(op: str, bits: int, msg_bits: int) -> Graph:
     """Graph of one radix unary op (radix_relu) over a D-digit vector."""
-    d = bits // msg_bits
-
-    def fn(a):
-        return getattr(a, op)(msg_bits=msg_bits)
-
-    return trace(fn, (d,))
+    return trace_program(_UNOPS[op], (IntSpec(bits, msg_bits),)).graph
 
 
 def encrypt_request_inputs(ic: IntegerContext, key: jax.Array,

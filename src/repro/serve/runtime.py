@@ -36,6 +36,18 @@ class AdmissionError(RuntimeError):
     """A client's queue is full — the request was not accepted."""
 
 
+class SubmitValidationError(ValueError):
+    """The request is malformed (input count/shape vs the graph's input
+    nodes) — rejected at submit, before any worker thread runs.  Without
+    this check a bad request would only fail DEEP in execution, and the
+    fault layer would burn `max_retries` re-runs on a request that can
+    never succeed."""
+
+
+class RuntimeClosedError(RuntimeError):
+    """submit() after close() — the runtime no longer admits work."""
+
+
 @dataclasses.dataclass
 class ServeRequest:
     client_id: str
@@ -79,13 +91,17 @@ class ServeRuntime:
                  max_queued_per_client: Optional[int] = None,
                  fault: Optional[FaultConfig] = None,
                  fault_hook: Optional[Callable] = None,
-                 start_paused: bool = False):
+                 start_paused: bool = False,
+                 intra_fuse: bool = True):
         self.ctx = ctx
         self.engine = engine if engine is not None \
             else TaurusEngine.from_context(ctx)
         self.fused = fused
         self.scheduler = FusedLutScheduler(dedup=dedup) if fused else None
         self.fault = fault if fault is not None else FaultConfig(max_retries=2)
+        # fuse the per-vector rounds of one request's tensor-level radix
+        # nodes through the shared scheduler (IrInterpreter fan-out)
+        self.intra_fuse = intra_fuse
         # test/chaos hook: called as fault_hook(request, attempt) at the
         # start of every execution attempt; raising simulates a failure
         self.fault_hook = fault_hook
@@ -104,14 +120,36 @@ class ServeRuntime:
         # bounded so a long-lived server doesn't grow per-request state
         self.stats = {"admitted": collections.deque(maxlen=10_000),
                       "completed": 0, "failed": 0,
-                      "retries": 0, "rejected": 0}
+                      "retries": 0, "rejected": 0, "invalid": 0}
 
     # -- client API ----------------------------------------------------------
+    def _validate_submit(self, graph: Graph, enc_inputs: list) -> None:
+        """Typed, submit-time request validation: mismatches raise
+        `SubmitValidationError` at the door instead of surfacing as
+        worker-thread failures that the fault layer retries."""
+        in_nodes = [n for n in graph.nodes if n.op == "input"]
+        if len(enc_inputs) != len(in_nodes):
+            self.stats["invalid"] += 1
+            raise SubmitValidationError(
+                f"graph has {len(in_nodes)} input nodes but "
+                f"{len(enc_inputs)} encrypted inputs were submitted")
+        ct_width = self.ctx.params.big_n + 1
+        for node, arr in zip(in_nodes, enc_inputs):
+            shape = tuple(getattr(arr, "shape", ()))
+            if len(shape) != 2 or shape != (node.n_elements, ct_width):
+                self.stats["invalid"] += 1
+                raise SubmitValidationError(
+                    f"input for node {node.id} (shape {node.shape}): "
+                    f"expected a ({node.n_elements}, {ct_width}) big-key "
+                    f"LWE array, got {shape or type(arr).__name__}")
+
     def submit(self, graph: Graph, enc_inputs: list,
                client_id: str = "client-0") -> RequestHandle:
         with self._lock:
             if self._closed:
-                raise RuntimeError("runtime is closed")
+                raise RuntimeClosedError(
+                    "runtime is closed — create a new ServeRuntime")
+            self._validate_submit(graph, enc_inputs)
             queued = len(self._queues.get(client_id, ()))
             if (self.max_queued_per_client is not None
                     and queued >= self.max_queued_per_client):
@@ -206,7 +244,9 @@ class ServeRuntime:
         try:
             eng = self.scheduler.proxy(self.engine) if self.fused \
                 else self.engine
-            interp = IrInterpreter(self.ctx, eng)
+            interp = IrInterpreter(self.ctx, eng,
+                                   intra_fuse=self.intra_fuse,
+                                   holds_slot=self.fused)
             attempt = {"n": 0}
 
             def step():

@@ -1,0 +1,201 @@
+"""The `repro.api` front door: one traced program, three backends,
+identical plaintexts.
+
+The acceptance contract of the Session API: `session.trace` compiles a
+Python function over `EncryptedInt` / `EncryptedTensor` operators into a
+`Program`, and `EagerBackend` (direct IntegerContext), `LocalBackend`
+(serving IR interpreter) and `ServeBackend` (multi-tenant runtime with
+cross- and intra-request round fusion) decrypt to the same values.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import (EagerBackend, IntSpec, Program, Session, TensorSpec,
+                       trace_program)
+from repro.compiler.ir import trace
+from repro.fhe_ml.executor import FheExecutor, interpret
+from repro.serve import radix_binop_program
+
+BITS = 8
+MOD = 1 << BITS
+
+
+def _mixed_fn(a, b):
+    """Covers every traced operator family: add/sub/mul, relu, cmp,
+    boolean comparison (cmp verdict + LUT)."""
+    s = a + b
+    p = (a - b).relu()
+    return s, p, a.cmp(b), (a < b)
+
+
+def _expected(x, y):
+    lt = 1 if x < y else 0
+    cmpv = 0 if x == y else (1 if x < y else 2)
+    sub = (x - y) % MOD
+    relu = 0 if sub >= MOD // 2 else sub
+    return [(x + y) % MOD, relu, cmpv, lt]
+
+
+@pytest.mark.parametrize("backend", ["eager", "local", "serve"])
+def test_traced_program_identical_on_all_backends(ctx_4bit, engine_4bit,
+                                                  backend):
+    """ISSUE 3 acceptance: one traced program decrypts to identical
+    plaintexts on EagerBackend, LocalBackend and ServeBackend."""
+    with Session(ctx_4bit, engine_4bit, backend=backend) as sess:
+        prog = sess.trace(_mixed_fn, IntSpec(BITS), IntSpec(BITS))
+        x, y = 173, 209
+        got = sess(prog, jax.random.key(7), x, y)
+    want = _expected(x, y)
+    assert got[0] == want[0] and got[1] == want[1]
+    assert int(got[2][0]) == want[2] and int(got[3][0]) == want[3]
+
+
+def test_trace_records_expected_graph(ctx_4bit, engine_4bit):
+    sess = Session(ctx_4bit, engine_4bit, backend="eager")
+    prog = sess.trace(_mixed_fn, IntSpec(BITS), IntSpec(BITS))
+    ops = [n.op for n in prog.graph.nodes]
+    assert ops.count("input") == 2
+    for op in ("radix_add", "radix_sub", "radix_relu", "radix_cmp"):
+        assert op in ops
+    assert ops.count("radix_cmp") == 2         # .cmp() and (a < b)
+    assert ops.count("lut") == 1               # the verdict-to-bit table
+    assert len(prog.out_specs) == 4
+
+
+def test_traced_program_matches_plaintext_oracle(ctx_4bit, engine_4bit):
+    """The interpret() oracle executes radix nodes with integer
+    semantics, so traced programs are checkable without keys."""
+    sess = Session(ctx_4bit, engine_4bit, backend="eager")
+    prog = sess.trace(lambda a, b: ((a + b) * a).relu(),
+                      IntSpec(BITS), IntSpec(BITS))
+    spec = sess.int_ctx.spec(BITS)
+    x, y = 201, 77
+    ref = interpret(prog.graph, [spec.to_digits(x), spec.to_digits(y)],
+                    ctx_4bit.params.width)
+    ref_int = spec.from_digits(ref[prog.graph.outputs[0]])
+    got = sess(prog, jax.random.key(3), x, y)[0]
+    t = ((x + y) * x) % MOD
+    assert got == ref_int == (0 if t >= MOD // 2 else t)
+
+
+def test_multi_int_specs_encrypt_run_decrypt(ctx_4bit, engine_4bit):
+    """IntSpec with a leading shape: a tensor-level radix node over V
+    vectors, elementwise semantics, array decrypt."""
+    with Session(ctx_4bit, engine_4bit, backend="local") as sess:
+        prog = sess.trace(lambda a, b: a + b,
+                          IntSpec(BITS, shape=(3,)), IntSpec(BITS, shape=(3,)))
+        xs, ys = [7, 200, 255], [13, 99, 1]
+        got = sess(prog, jax.random.key(11), xs, ys)[0]
+    np.testing.assert_array_equal(got, [(x + y) % MOD for x, y in zip(xs, ys)])
+
+
+def test_tensor_program_eager_and_local_agree(ctx_2bit, engine_2bit):
+    """The EncryptedTensor (fhe_ml value kind) path flows through the
+    same Session door and matches the plaintext oracle on both local
+    executors."""
+    mod = ctx_2bit.params.plaintext_modulus
+    table = np.array([(3 * v + 1) % mod for v in range(mod)])
+
+    def prog_fn(x):
+        return (x + np.array([1, 0, 1, 0])).lut(table)
+
+    xs = np.array([0, 1, 2, 1])
+    outs = {}
+    for backend in ("eager", "local"):
+        sess = Session(ctx_2bit, engine_2bit, backend=backend)
+        prog = sess.trace(prog_fn, TensorSpec((4,)))
+        outs[backend] = sess(prog, jax.random.key(5), xs)[0]
+        ref = interpret(prog.graph, [xs], ctx_2bit.params.width)
+        np.testing.assert_array_equal(outs[backend],
+                                      ref[prog.graph.outputs[0]])
+    np.testing.assert_array_equal(outs["eager"], outs["local"])
+
+
+def test_program_from_graph_adopts_lowered_graphs(ctx_2bit, engine_2bit):
+    """Hand-built / fhe_ml-lowered graphs run through Session.compile
+    with derived tensor specs."""
+    mod = ctx_2bit.params.plaintext_modulus
+    g = trace(lambda x: (x + np.array([1, 1])).lut(
+        np.arange(mod, dtype=np.uint64)[::-1].copy()), (2,))
+    sess = Session(ctx_2bit, engine_2bit, backend="eager")
+    prog = sess.compile(g)
+    assert isinstance(prog, Program) and prog.n_inputs == 1
+    xs = np.array([0, 2])
+    got = sess(prog, jax.random.key(1), xs)[0]
+    want = interpret(g, [xs], ctx_2bit.params.width)[g.outputs[0]]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_serve_programs_trace_through_api(ctx_4bit):
+    """serve.radix_binop_program graphs are api traces: same structure
+    the Session records for the same op."""
+    g = radix_binop_program("radix_add", BITS, 2)
+    prog = trace_program(lambda a, b: a + b, (IntSpec(BITS, 2),) * 2)
+    assert [n.op for n in g.nodes] == [n.op for n in prog.graph.nodes]
+    assert [n.shape for n in g.nodes] == [n.shape for n in prog.graph.nodes]
+
+
+def test_comparisons_need_width():
+    with pytest.raises(TypeError, match="width"):
+        trace_program(lambda a, b: a < b, (IntSpec(BITS, 2),) * 2)
+
+
+def test_mixed_operand_type_rejected():
+    with pytest.raises(TypeError, match="EncryptedInt"):
+        trace_program(lambda a: a + 3, (IntSpec(BITS, 2),))
+
+
+def test_fhe_executor_is_a_deprecation_shim(ctx_2bit):
+    """FheExecutor.run still works (same results, same stats surface)
+    but warns, and shares its engine room with EagerBackend."""
+    mod = ctx_2bit.params.plaintext_modulus
+    t = np.arange(mod, dtype=np.uint64)[::-1].copy()
+    g = trace(lambda x: (x.lut(t, name="a"), x.lut(t, name="b")), (2,))
+    ex = FheExecutor(ctx_2bit)
+    assert isinstance(ex._backend, EagerBackend)
+    enc = ex.encrypt_inputs(jax.random.key(2), [np.array([1, 2])])
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = ex.run(g, enc)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    np.testing.assert_array_equal(ex.decrypt(out[g.outputs[0]]),
+                                  t[np.array([1, 2])])
+    assert ex.stats["pbs"] == 4
+    assert ex.stats["keyswitch"] == 2          # KS-dedup across the fanout
+    assert ex.stats["lut_polys"] == 1          # ACC-dedup
+
+
+def test_oracle_radix_semantics():
+    """interpret() radix extension: digit-vector semantics mod 2^bits
+    for every radix op, no keys involved."""
+    m, d = 2, 4
+    spec = IntSpec(BITS, m)
+
+    def digits(v):
+        return np.array([(v >> (i * m)) & 3 for i in range(d)], np.int64)
+
+    cases = {
+        "add": (lambda a, b: a + b, lambda x, y: (x + y) % MOD),
+        "sub": (lambda a, b: a - b, lambda x, y: (x - y) % MOD),
+        "mul": (lambda a, b: a * b, lambda x, y: (x * y) % MOD),
+    }
+    rng = np.random.default_rng(0)
+    for name, (fn, ref) in cases.items():
+        prog = trace_program(fn, (spec, spec))
+        for _ in range(5):
+            x, y = int(rng.integers(0, MOD)), int(rng.integers(0, MOD))
+            out = interpret(prog.graph, [digits(x), digits(y)], 4)
+            got = sum(int(v) << (i * m)
+                      for i, v in enumerate(out[prog.graph.outputs[0]]))
+            assert got == ref(x, y), (name, x, y)
+    prog = trace_program(lambda a, b: a.cmp(b), (spec, spec))
+    out = interpret(prog.graph, [digits(9), digits(200)], 4)
+    assert out[prog.graph.outputs[0]].tolist() == [1]
+    prog = trace_program(lambda a: a.relu(), (spec,))
+    out = interpret(prog.graph, [digits((-5) % MOD)], 4)
+    assert sum(int(v) << (i * m)
+               for i, v in enumerate(out[prog.graph.outputs[0]])) == 0

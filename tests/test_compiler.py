@@ -144,3 +144,19 @@ def test_interpret_matches_numpy_linear():
     x = rng.integers(0, 4, (4,))
     out = interpret(g, [x], 6)
     np.testing.assert_array_equal(out[g.outputs[0]], (x @ W + 8) % 64)
+
+
+def test_radix_round_plan_degenerate_and_width_override():
+    """Review follow-ups: a single-digit vector is ONE ripple extraction
+    round for every strategy hint (matching IntegerContext.propagate),
+    and an explicit `width` overrides the standard width = 2*msg_bits
+    assumption when the caller knows the parameter set."""
+    from repro.compiler.ir import radix_round_plan
+    for m in (None, 1, 2):
+        plan = radix_round_plan("radix_add", 1, m)
+        assert len(plan) == 1 and plan[0]["luts"] == 2
+    # msg_bits=1 under a 4-bit window: the runtime takes the prefix scan
+    assert (radix_round_plan("radix_add", 16, 1, width=4)
+            == radix_round_plan("radix_add", 16, 2))
+    # and the standard base-2 layout stays on the lookahead plan
+    assert len(radix_round_plan("radix_add", 16, 1)) == 10

@@ -1,0 +1,99 @@
+"""Process-wide LUT-polynomial row cache (`glwe.make_lut_polys_cached`):
+bounded FIFO eviction and cross-context reuse, asserted through the
+hit/miss/eviction counters (ISSUE 3 satellite).
+
+No key material needed — the cache keys on (params, table-row bytes)
+and encodes plaintext test polynomials.
+"""
+import numpy as np
+import pytest
+
+from repro.core import glwe
+from repro.core.integer import msg_table, carry_table
+from repro.core.params import TEST_PARAMS, TEST_PARAMS_4BIT
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    """Each test starts (and leaves) the process-wide cache empty so the
+    counters are deterministic and other tests see no stale rows."""
+    glwe.clear_row_poly_cache()
+    yield
+    glwe.clear_row_poly_cache()
+
+
+def _rows(params, n):
+    """n distinct LUT rows (cyclic shifts of the identity; n <= mod)."""
+    mod = params.plaintext_modulus
+    assert n <= mod
+    return np.stack([(np.arange(mod) + i) % mod
+                     for i in range(n)]).astype(np.uint64)
+
+
+def test_miss_then_hit_counters():
+    tables = _rows(TEST_PARAMS, 3)
+    glwe.make_lut_polys_cached(tables, TEST_PARAMS)
+    assert glwe.row_poly_cache_stats() == {
+        "hits": 0, "misses": 3, "evictions": 0}
+    # a fresh, differently-tiled stack of the same rows: all hits
+    glwe.make_lut_polys_cached(np.tile(tables, (2, 1)), TEST_PARAMS)
+    assert glwe.row_poly_cache_stats() == {
+        "hits": 3, "misses": 3, "evictions": 0}
+
+
+def test_duplicate_rows_count_once_per_lookup():
+    """A stack tiling ONE row encodes (and counts) one miss."""
+    row = _rows(TEST_PARAMS, 1)
+    glwe.make_lut_polys_cached(np.tile(row, (8, 1)), TEST_PARAMS)
+    s = glwe.row_poly_cache_stats()
+    assert (s["misses"], s["hits"]) == (1, 0)
+
+
+def test_bounded_eviction_fifo(monkeypatch):
+    monkeypatch.setattr(glwe, "_ROW_POLY_CACHE_MAX", 4)
+    p = TEST_PARAMS_4BIT
+    tables = _rows(p, 6)
+    for i in range(6):
+        glwe.make_lut_polys_cached(tables[i:i + 1], p)
+    s = glwe.row_poly_cache_stats()
+    assert len(glwe._ROW_POLY_CACHE) <= 4
+    assert s["evictions"] == 2 and s["misses"] == 6
+    # the first row was evicted (FIFO): looking it up again is a miss
+    # that re-encodes to the SAME polynomial
+    fresh = glwe.make_lut_polys_cached(tables[:1], p)
+    assert glwe.row_poly_cache_stats()["misses"] == 7
+    np.testing.assert_array_equal(
+        np.asarray(fresh), np.asarray(glwe.make_lut_polys(tables[:1], p)))
+    # the most recent row is still cached: pure hit
+    glwe.make_lut_polys_cached(tables[5:6], p)
+    assert glwe.row_poly_cache_stats()["hits"] == 1
+
+
+def test_cross_context_reuse_counts_hits():
+    """Two independent IntegerContexts over the same parameter set share
+    row encodes: the second context's identical msg/carry stack is all
+    cache hits (the serving win — concurrent clients stop re-encoding)."""
+    p = TEST_PARAMS_4BIT
+    w, m = p.width, 2
+    stack = np.concatenate([np.tile(msg_table(w, m), (4, 1)),
+                            np.tile(carry_table(w, m), (4, 1))])
+    ctx_a_polys = glwe.make_lut_polys_cached(stack, p)
+    s = glwe.row_poly_cache_stats()
+    assert (s["misses"], s["hits"]) == (2, 0)      # msg + carry rows
+    ctx_b_polys = glwe.make_lut_polys_cached(stack.copy(), p)
+    s = glwe.row_poly_cache_stats()
+    assert (s["misses"], s["hits"]) == (2, 2)      # second context: free
+    np.testing.assert_array_equal(np.asarray(ctx_a_polys),
+                                  np.asarray(ctx_b_polys))
+
+
+def test_params_partition_the_cache():
+    """Identical table bytes under DIFFERENT params are different
+    entries — a hit under one parameter set must not leak a wrongly
+    scaled polynomial to another."""
+    t2 = np.arange(TEST_PARAMS.plaintext_modulus, dtype=np.uint64)[None]
+    glwe.make_lut_polys_cached(t2, TEST_PARAMS)
+    t4 = np.arange(TEST_PARAMS_4BIT.plaintext_modulus, dtype=np.uint64)[None]
+    glwe.make_lut_polys_cached(t4, TEST_PARAMS_4BIT)
+    s = glwe.row_poly_cache_stats()
+    assert (s["misses"], s["hits"]) == (2, 0)

@@ -221,3 +221,33 @@ def test_per_digit_noise_budget(ic4):
     m = ic4.mul(ca, cb)
     noise_m = ic4.digit_noise(m, (a * b) % 2 ** 16)
     assert np.max(np.abs(noise_m)) < budget
+
+
+# --- the round-plan cost model vs reality -----------------------------------
+
+@pytest.mark.parametrize("fixture,bits,strategy", [
+    ("ic2", 16, "lookahead"),    # width 2, D=16: 2 + 2*log2(D) < D
+    ("ic2", 8, "ripple"),        # width 2, D=8: lookahead doesn't pay
+    ("ic4", 16, "prefix"),       # width 4: packed Hillis-Steele scan
+])
+def test_round_plan_matches_observed_stats(request, fixture, bits, strategy):
+    """`radix_round_plan` is the compiler's single source of truth for
+    the batched-PBS schedule; with msg_bits it must model the SAME
+    strategy `IntegerContext.propagate` auto-selects — round count AND
+    per-round batch sizes (ISSUE 3 satellite: base-2 programs were
+    under-counted before the lookahead plan existed)."""
+    from repro.compiler.ir import radix_round_plan
+    ic = request.getfixturevalue(fixture)
+    spec = ic.spec(bits)
+    mask = (1 << bits) - 1
+    a = ic.encrypt(jax.random.key(301), 0xBEEF & mask, bits)
+    b = ic.encrypt(jax.random.key(302), 0x1234 & mask, bits)
+    ic.reset_stats()
+    s = ic.add(a, b)
+    assert ic.decrypt(s) == (0xBEEF + 0x1234) & mask
+    plan = radix_round_plan("radix_add", spec.n_digits, spec.msg_bits)
+    assert ic.stats["lut_batches"] == len(plan), strategy
+    assert ic.stats["batch_sizes"] == [r["luts"] for r in plan], strategy
+    # msg_bits omitted keeps the historical wide-window (prefix) model
+    if strategy == "prefix":
+        assert plan == radix_round_plan("radix_add", spec.n_digits)

@@ -224,3 +224,67 @@ def test_fault_exhausted_retries_surface(ctx_2bit, engine_2bit):
     with pytest.raises(RuntimeError, match="poisoned"):
         h.wait(timeout=5)
     assert rt.stats["failed"] == 1
+
+
+# --- typed submit validation -------------------------------------------------
+
+def test_submit_validation_typed_errors(ctx_2bit, engine_2bit):
+    """Malformed requests fail AT SUBMIT with SubmitValidationError —
+    not as worker-thread failures that burn fault retries."""
+    from repro.serve import RuntimeClosedError, SubmitValidationError
+    rt = ServeRuntime(ctx_2bit, engine_2bit, fused=False, start_paused=True)
+    g = _linear_graph(1)
+    x = ctx_2bit.encrypt(jax.random.key(30), np.array([1]))
+    with pytest.raises(SubmitValidationError, match="1 input nodes"):
+        rt.submit(g, [], client_id="A")                 # too few inputs
+    with pytest.raises(SubmitValidationError, match="1 input nodes"):
+        rt.submit(g, [x, x], client_id="A")             # too many
+    with pytest.raises(SubmitValidationError, match="expected a"):
+        rt.submit(g, [x[:, :-1]], client_id="A")        # truncated ct
+    with pytest.raises(SubmitValidationError, match="expected a"):
+        rt.submit(g, [np.stack([x, x])], client_id="A")  # wrong rank
+    assert rt.stats["invalid"] == 4 and rt.stats["retries"] == 0
+    h = rt.submit(g, [x], client_id="A")                # valid one runs
+    rt.resume()
+    rt.close()
+    assert int(ctx_2bit.decrypt(h.outputs()[0][0])) == 2
+    with pytest.raises(RuntimeClosedError):
+        rt.submit(g, [x], client_id="A")
+
+
+# --- intra-request fusion (tensor-level radix nodes) ------------------------
+
+def test_intra_request_vector_fanout_fuses(ctx_4bit, engine_4bit, ic4):
+    """ONE request whose program adds a (3,)-tensor of radix integers:
+    with intra_fuse the three vectors' identical carry rounds barrier
+    into shared fused batches (round count collapses to one vector's
+    schedule), and the decrypted values match the unfused run."""
+    import jax.numpy as jnp
+
+    m = ic4.spec(BITS).msg_bits
+    d = ic4.spec(BITS).n_digits
+    g = trace(lambda a, b: a.radix_add(b, msg_bits=m), (3, d), (3, d))
+    rng = np.random.default_rng(9)
+    xs = [int(v) for v in rng.integers(0, 256, 3)]
+    ys = [int(v) for v in rng.integers(0, 256, 3)]
+    enc = [jnp.concatenate(encrypt_request_inputs(
+               ic4, jax.random.key(80 + j), vals, BITS))
+           for j, vals in enumerate((xs, ys))]
+
+    def wave(intra):
+        rt = ServeRuntime(ctx_4bit, engine_4bit, max_inflight=1,
+                          intra_fuse=intra, start_paused=True)
+        h = rt.submit(g, enc, client_id="A")
+        rt.resume()
+        rt.drain()
+        return rt, decrypt_radix_output(ic4, h.outputs()[0], BITS)
+
+    rt_on, got_on = wave(True)
+    rt_off, got_off = wave(False)
+    want = [(x + y) % 256 for x, y in zip(xs, ys)]
+    assert got_on == want and got_off == want
+    on, off = rt_on.scheduler.stats, rt_off.scheduler.stats
+    # same logical work, a third of the dispatches: rounds fused 3-wide
+    assert on["logical_luts"] == off["logical_luts"]
+    assert on["fused_rounds"] * 3 == off["fused_rounds"]
+    assert rt_on.scheduler.mean_occupancy == pytest.approx(1.0)
