@@ -16,7 +16,7 @@ import sys
 import traceback
 
 ALL = ["fig5", "table2", "table4", "fig13", "fig15", "dedup", "engine",
-       "radix", "serve"]
+       "radix", "serve", "fhe_ml"]
 
 
 def main(argv=None):
@@ -31,13 +31,13 @@ def main(argv=None):
 
     from benchmarks import (fig5_addition, table2_workloads, table4_xpu,
                             fig13_bandwidth, fig15_utilization, dedup_stats,
-                            engine_wallclock, radix_throughput,
+                            engine_wallclock, fhe_ml_serve, radix_throughput,
                             serve_throughput)
     mods = {"fig5": fig5_addition, "table2": table2_workloads,
             "table4": table4_xpu, "fig13": fig13_bandwidth,
             "fig15": fig15_utilization, "dedup": dedup_stats,
             "engine": engine_wallclock, "radix": radix_throughput,
-            "serve": serve_throughput}
+            "serve": serve_throughput, "fhe_ml": fhe_ml_serve}
 
     if args.dry_run:
         bad = [n for n in which if not callable(getattr(mods[n], "run", None))]

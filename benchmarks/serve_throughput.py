@@ -40,12 +40,27 @@ BITS = 8
 
 
 def write_bench_json(rows: list, path: str | None = None) -> str:
-    """Write the serve rows to benchmarks/BENCH_serve.json."""
+    """Merge serve rows into benchmarks/BENCH_serve.json by workload.
+
+    The file tracks the serving perf trajectory across PRs for SEVERAL
+    workloads (this module's radix-add fleet, fhe_ml_serve's encrypted
+    transformers); re-running one benchmark must not clobber the
+    others' rows, so only rows whose "workload" is re-measured here are
+    replaced."""
     if path is None:
         path = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
+    rows = [r for r in rows if r.get("bench") == "serve"]
+    existing = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f)
+        except (OSError, ValueError):
+            existing = []
+    fresh = {r.get("workload") for r in rows}
+    keep = [r for r in existing if r.get("workload") not in fresh]
     with open(path, "w") as f:
-        json.dump([r for r in rows if r.get("bench") == "serve"], f,
-                  indent=1, default=float)
+        json.dump(keep + rows, f, indent=1, default=float)
     return path
 
 
@@ -169,7 +184,8 @@ def run() -> list:
     # node into per-vector rounds must not dilute the fused batches
     assert occ_intra >= occ_cross - 1e-6, (occ_intra, occ_cross)
     row = {
-        "bench": "serve", "clients": len(jobs), "bits": BITS,
+        "bench": "serve", "workload": "radix_add_clients",
+        "clients": len(jobs), "bits": BITS,
         "params": params.name,
         "requests_per_s_sequential": rps_seq,
         "requests_per_s_fused": rps_fused,

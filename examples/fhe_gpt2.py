@@ -1,28 +1,42 @@
 """Encrypted GPT-2 block inference — the paper's flagship demonstration
-at laptop scale.
+at laptop scale, in both activation representations.
 
     PYTHONPATH=src python examples/fhe_gpt2.py
 
-Quantizes a single-head GPT-2-style block, lowers it to the FHE IR,
-encrypts an input vector, runs attention (ct*ct via square-trick LUTs) +
-GELU MLP under REAL TFHE on the JAX engine, and checks the decrypted
-output against the plaintext integer oracle bit-for-bit.  Also reports
-what the same graph costs on the Taurus accelerator model.
+Part 1 (narrow-LUT): quantizes a single-head GPT-2-style block to 3-bit
+affine activations, lowers it to requant-LUT FHE IR, runs attention
+(ct*ct via square-trick LUTs) + GELU MLP under REAL TFHE on the JAX
+engine, and checks the decrypted output against the plaintext integer
+oracle bit-for-bit.  Also reports what the same graph costs on the
+Taurus accelerator model.
+
+Part 2 (quantize-to-radix, ISSUE 4): the same block shape on 16-bit
+two's-complement radix activations — exact `radix_linear` projections,
+exact ct*ct attention (`radix_mul`), ReLU MLP, no requant LUTs — traced
+into ONE program that runs identically on the eager debugging backend
+and through `Session(ctx, backend="serve")`, i.e. submitted to the
+multi-tenant `ServeRuntime` as real encrypted-LLM traffic whose radix
+rounds fuse with every other in-flight request.  Reports the fused-
+round occupancy the serving scheduler measured while executing it.
+
+docs/fhe_gpt2_walkthrough.md narrates this file line by line.
 """
 import numpy as np
 import jax
 
 from repro.api import Session
-from repro.core.params import TEST_PARAMS_6BIT, PAPER_PARAMS
+from repro.core.params import TEST_PARAMS_4BIT, TEST_PARAMS_6BIT, PAPER_PARAMS
 from repro.core.pbs import TFHEContext
 from repro.fhe_ml import lower, executor
-from repro.fhe_ml.quantize import QuantSpec
+from repro.fhe_ml.quantize import (QuantSpec, RadixQuantSpec,
+                                   calibrate_radix, dequantize_radix,
+                                   quantize_to_radix)
 from repro.compiler import passes, build_schedule, TaurusModel
 
 
-def main():
+def narrow_lut_demo():
     d = 4
-    print("== encrypted GPT-2 block (reduced) ==")
+    print("== encrypted GPT-2 block (narrow-LUT, 3-bit activations) ==")
     print(f"scheme: n={TEST_PARAMS_6BIT.n} N={TEST_PARAMS_6BIT.N} "
           f"width={TEST_PARAMS_6BIT.width}")
 
@@ -33,8 +47,7 @@ def main():
 
     ctx = TFHEContext.create(jax.random.PRNGKey(42), TEST_PARAMS_6BIT)
     # the api front door: adopt the lowered graph as a Program and run it
-    # on the eager debugging backend (swap backend="serve" to put this
-    # block behind the multi-tenant runtime, unchanged)
+    # on the eager debugging backend
     sess = Session(ctx, backend="eager")
     prog = sess.compile(g)
     x = np.random.default_rng(0).integers(0, 8, (d,))
@@ -55,6 +68,73 @@ def main():
     print(f"\nTaurus model @ paper GPT-2 params: {t * 1e3:.2f} ms "
           f"({sched.total_pbs} PBS, util {util:.0%}, "
           f"KS-dedup saved {stats.ks_saved_frac:.0%})")
+
+
+def radix_serve_demo():
+    d, bits, m = 2, 16, 2
+    print("\n== encrypted GPT-2 block (quantize-to-radix, "
+          f"{bits}-bit activations) on the serve path ==")
+    print(f"scheme: n={TEST_PARAMS_4BIT.n} N={TEST_PARAMS_4BIT.N} "
+          f"width={TEST_PARAMS_4BIT.width} "
+          f"(digits of {m} message bits, D={bits // m})")
+
+    # lower once: the graph is quantization-agnostic (no LUT tables bake
+    # in a scale) and carries its own range certificate + IntSpecs
+    g, meta = lower.lower_gpt2_block_radix(d, bits=bits, msg_bits=m, seed=1)
+    print(f"graph: {len(g.nodes)} nodes "
+          f"({[n.op for n in g.nodes if n.op != 'input']}), "
+          f"{g.lut_applications()} planned PBS applications, "
+          f"input_qmax={meta['input_qmax']}")
+
+    # quantize a float activation vector against the certificate
+    xf = np.random.default_rng(3).uniform(-1, 1, size=(d,))
+    rq = calibrate_radix(xf, bits, m, qmax=meta["input_qmax"])
+    q = quantize_to_radix(xf, rq)
+    print(f"input (float): {xf}\ninput (radix-quantized): {q}  "
+          f"scale={rq.scale:.4g}")
+
+    ctx = TFHEContext.create(jax.random.PRNGKey(42), TEST_PARAMS_4BIT)
+    want = meta["int_fn"](q) % (1 << bits)
+
+    # eager reference run
+    with Session(ctx, backend="eager") as sess:
+        prog = sess.compile(g, meta["in_specs"], meta["out_specs"])
+        eager_out = np.asarray(sess(prog, jax.random.PRNGKey(7), q)[0])
+
+    # the same program as encrypted-LLM traffic through the multi-tenant
+    # runtime: radix rounds barrier through the FusedLutScheduler
+    with Session(ctx, backend="serve") as sess:
+        prog = sess.compile(g, meta["in_specs"], meta["out_specs"])
+        serve_out = np.asarray(sess(prog, jax.random.PRNGKey(7), q)[0])
+        sched = sess.backend.scheduler
+        print(f"serve scheduler: {sched.stats['fused_rounds']} fused "
+              f"rounds, occupancy {sched.mean_occupancy:.0%}, "
+              f"{sched.stats['logical_luts']} logical LUTs")
+
+    print(f"decrypted (eager): {eager_out}\ndecrypted (serve): {serve_out}")
+    assert np.array_equal(eager_out % (1 << bits), want), "FHE != oracle!"
+    assert np.array_equal(eager_out, serve_out), "serve != eager!"
+
+    # two ct*ct products => output values carry scale^3 (meta says so)
+    out_rq = RadixQuantSpec(bits, m, rq.scale ** meta["out_scale_pow"])
+    yhat = dequantize_radix(eager_out, out_rq)
+    yf = meta["float_fn"](xf)
+    print(f"dequantized: {yhat}\nfloat model: {yf}")
+    print("bit-exact across backends ✓ "
+          f"(max |dequant - float| = {np.max(np.abs(yhat - yf)):.3g})")
+
+    # the radix graph on the accelerator model
+    ops, stats = passes.lower_to_physical(g)
+    sched_m = build_schedule(ops)
+    t, util = TaurusModel(PAPER_PARAMS["gpt2"]).bandwidth_bound_runtime(
+        sched_m)
+    print(f"Taurus model @ paper GPT-2 params: {t * 1e3:.2f} ms "
+          f"({sched_m.total_pbs} PBS, util {util:.0%})")
+
+
+def main():
+    narrow_lut_demo()
+    radix_serve_demo()
 
 
 if __name__ == "__main__":

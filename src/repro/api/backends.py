@@ -91,11 +91,20 @@ def eval_linear_ct_op(n, vals: dict, p: TFHEParams):
 
 
 def eval_radix_vector(ic: IntegerContext, op: str, spec, av: jax.Array,
-                      bv: Optional[jax.Array]) -> jax.Array:
+                      bv: Optional[jax.Array],
+                      max_val: Optional[int] = None) -> jax.Array:
     """One radix IR op on ONE digit vector through `IntegerContext`.
     Shared by `EagerBackend` and `repro.serve.IrInterpreter` — the
-    radix execution semantics has exactly one definition."""
+    radix execution semantics has exactly one definition.
+
+    For `radix_linear`, `av` is one PRE-COMBINED output vector from
+    `IntegerContext.linear_compress` and `max_val` its digit ceiling;
+    this evaluator finishes the carry propagation (so the per-vector
+    propagation rounds fan out / fuse exactly like the elementwise
+    radix ops)."""
     ra = RadixCiphertext(spec, av)
+    if op == "radix_linear":
+        return ic.propagate(ra, max_val=max_val).digits
     if op == "radix_add":
         return ic.add(ra, RadixCiphertext(spec, bv)).digits
     if op == "radix_sub":
@@ -167,10 +176,15 @@ class EagerBackend:
         spec = self.int_ctx.spec(m * d, m)
         width = self.params.big_n + 1
         a = vals[n.inputs[0]].reshape(-1, d, width)
-        b = vals[n.inputs[1]].reshape(-1, d, width) \
-            if len(n.inputs) == 2 else None
+        b, mv = None, None
+        if n.op == "radix_linear":
+            # LPU-combine + carry-save compress to one vector per output
+            # column; the per-vector loop below finishes the propagation
+            a, mv = self.int_ctx.linear_compress(a, n.attrs["W"], spec)
+        elif len(n.inputs) == 2:
+            b = vals[n.inputs[1]].reshape(-1, d, width)
         outs = [eval_radix_vector(self.int_ctx, n.op, spec, a[v],
-                                  None if b is None else b[v])
+                                  None if b is None else b[v], max_val=mv)
                 for v in range(a.shape[0])]
         return jnp.concatenate(outs, axis=0)
 
@@ -275,6 +289,15 @@ _BACKENDS = {"eager": EagerBackend, "local": LocalBackend,
 
 
 def make_backend(name: str, ctx, engine=None, **kw):
+    """Construct a named backend ("eager" | "local" | "serve") over the
+    given key material; extra keywords forward to the backend's
+    constructor (e.g. `fused=True` for local, `max_inflight=8` for
+    serve).  `Session` calls this for string backends; use it directly
+    to share one backend across sessions::
+
+        be = make_backend("serve", ctx, engine, max_inflight=4)
+        sess = Session(ctx, engine, backend=be)
+    """
     try:
         cls = _BACKENDS[name]
     except KeyError:

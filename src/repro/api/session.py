@@ -91,6 +91,19 @@ class Session:
     Extra keyword arguments are forwarded to the named backend's
     constructor (e.g. `max_inflight=8` for "serve", `fused=True` for
     "local").
+
+    Example (the repo-wide three-step shape; `sess(prog, key, *vals)`
+    collapses encrypt -> run -> decrypt)::
+
+        with Session(ctx, backend="serve") as sess:
+            prog = sess.trace(lambda a, b: a + b, IntSpec(16), IntSpec(16))
+            print(sess(prog, jax.random.key(0), 1234, 567))   # [1801]
+
+    Hand-lowered graphs (e.g. the quantize-to-radix transformer blocks
+    from `repro.fhe_ml.lower`) adopt through `compile`::
+
+        g, meta = lower_gpt2_block_radix(2, bits=16, msg_bits=2)
+        prog = sess.compile(g, meta["in_specs"], meta["out_specs"])
     """
 
     def __init__(self, ctx, engine=None, backend="local", **backend_kw):
@@ -114,7 +127,17 @@ class Session:
         return trace_program(fn, in_specs, self.params)
 
     def compile(self, graph: Graph, in_specs=None, out_specs=None) -> Program:
-        """Adopt an existing IR graph (e.g. a `repro.fhe_ml` lowering)."""
+        """Adopt an existing IR graph (e.g. a `repro.fhe_ml` lowering)
+        as a backend-portable Program.
+
+        Without specs, inputs/outputs default to plain width-bit
+        ciphertext-slot tensors shaped like the graph's input/output
+        nodes (right for the narrow-LUT lowerings).  Radix graphs pass
+        their IntSpec lists — the quantize-to-radix lowerings hand them
+        over in meta::
+
+            prog = sess.compile(g, meta["in_specs"], meta["out_specs"])
+        """
         return Program.from_graph(graph, in_specs, out_specs)
 
     # -- client-side crypto --------------------------------------------------

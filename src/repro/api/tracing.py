@@ -39,6 +39,13 @@ class IntSpec:
     of V integers; the traced tensor gains a trailing digit axis of
     length `bits // msg_bits`.  msg_bits defaults per parameter set
     (half the plaintext window) when the spec reaches a `Session`.
+
+    Example::
+
+        prog = sess.trace(lambda a, b: a + b,
+                          IntSpec(16), IntSpec(16))          # scalars
+        prog = sess.trace(lambda v: v.linear(W).relu(),
+                          IntSpec(32, shape=(8,)))           # a vector
     """
     bits: int
     msg_bits: Optional[int] = None
@@ -172,6 +179,26 @@ class EncryptedInt:
         """Two's-complement max(x, 0)."""
         return EncryptedInt(self.t.radix_relu(self.spec.msg_bits),
                             self.spec, self.width)
+
+    def linear(self, W) -> "EncryptedInt":
+        """Plaintext integer matmul across the integer-vector axis: for a
+        vector of V encrypted integers and an integer (V, V_out) matrix,
+        out[j] = sum_i W[i, j] * self[i] mod 2^bits (a `radix_linear`
+        node — the quantize-to-radix linear layer of `repro.fhe_ml`).
+
+        Example::
+
+            prog = sess.trace(lambda x: x.linear(W).relu(),
+                              IntSpec(16, shape=(4,)))
+        """
+        W = np.asarray(W, np.int64)
+        if len(self.spec.shape) != 1:
+            raise TypeError(
+                f"linear needs a 1-D vector of encrypted integers "
+                f"(IntSpec shape (V,)), got shape {self.spec.shape}")
+        out_spec = dataclasses.replace(self.spec, shape=(int(W.shape[1]),))
+        return EncryptedInt(self.t.radix_linear(W, self.spec.msg_bits),
+                            out_spec, self.width)
 
     # -- comparisons ---------------------------------------------------------
     def cmp(self, other) -> EncryptedValue:

@@ -32,7 +32,15 @@ LINEAR_OPS = ("add", "sub", "addc", "mulc", "linear", "concat", "reshape")
 # a fixed schedule of batched-PBS rounds; `radix_round_plan` is the single
 # source of truth for that schedule, shared by the lowering in
 # `repro.compiler.passes` and by PBS accounting here.
-RADIX_OPS = ("radix_add", "radix_sub", "radix_mul", "radix_relu", "radix_cmp")
+#
+# `radix_linear` is the tensor-level op the fhe_ml quantize-to-radix
+# bridge lowers linear layers to: a plaintext integer matmul ACROSS the
+# vector axis of a (V, D) radix tensor (`IntegerContext.linear_compress`
+# + per-output carry propagation).  Unlike the elementwise ops its round
+# count depends on the weight matrix, so the node carries `term_maxes`
+# (per-term digit ceilings of its worst output column) for the plan.
+RADIX_OPS = ("radix_add", "radix_sub", "radix_mul", "radix_relu",
+             "radix_cmp", "radix_linear")
 
 
 def _ceil_log2(n: int) -> int:
@@ -40,7 +48,8 @@ def _ceil_log2(n: int) -> int:
 
 
 def radix_round_plan(op: str, n_digits: int, msg_bits: Optional[int] = None,
-                     width: Optional[int] = None) -> list:
+                     width: Optional[int] = None,
+                     term_maxes: Optional[tuple] = None) -> list:
     """Batched-PBS rounds of one radix op over a D-digit vector,
     mirroring the carry strategy `IntegerContext.propagate` auto-selects.
     Each round is a dict:
@@ -112,6 +121,54 @@ def radix_round_plan(op: str, n_digits: int, msg_bits: Optional[int] = None,
 
     if op in ("radix_add", "radix_sub"):
         return add_plan()
+    if op == "radix_linear":
+        # Mirrors `IntegerContext.linear_compress`: the weighted digit
+        # vectors are LPU-combined into per-output term lists; each round
+        # greedily merges, per column, the terms whose summed digit
+        # ceiling fits the plaintext window and extracts (msg, carry)
+        # for the merged groups; the surviving terms then pre-reduce and
+        # carry-propagate exactly like an add.  `term_maxes` is the
+        # per-column tuple of per-term ceilings recorded on the node at
+        # trace time (a flat tuple of ints is accepted as one column) —
+        # compression rounds run until EVERY column is down to one term,
+        # so the count is the max over columns, like the runtime.
+        m = msg_bits if msg_bits is not None else 2
+        w_eff = width if width is not None else 2 * m
+        window = (1 << w_eff) - 1
+        base = 1 << m
+        extract = {"luts": 2 * d, "sources": d,
+                   "tables": ("radix/msg", "radix/carry"), "macs": d}
+        rounds = []
+        if term_maxes and isinstance(term_maxes[0], (tuple, list)):
+            cols = [sorted(c) if c else [0] for c in term_maxes]
+        else:
+            cols = [sorted(term_maxes) if term_maxes else [base - 1]]
+        guard = 0
+        max_rounds = 8 * (d + max(len(c) for c in cols)) + 8
+        while any(len(c) > 1 for c in cols):
+            guard += 1
+            assert guard <= max_rounds, "radix_linear plan failed to converge"
+            for c in cols:
+                if len(c) < 2:
+                    continue
+                c.sort()
+                taken, mx = 0, 0
+                while taken < len(c) and mx + c[taken] <= window:
+                    mx += c[taken]
+                    taken += 1
+                if taken < 2:
+                    # no pair fits: solo-extract the LARGEST term
+                    # (mirrors linear_compress — its ceiling shrinks)
+                    mx = c.pop()
+                else:
+                    del c[:taken]
+                c.append((base - 1) + (mx >> m))
+            rounds.append(dict(extract))
+        mv = max(c[0] for c in cols)
+        while mv > 2 * base - 2:
+            mv = (base - 1) + (mv >> m)
+            rounds.append(dict(extract))
+        return rounds + add_plan()
     if op == "radix_mul":
         t = d * (d + 1) // 2
         rounds = [{"luts": 2 * t, "sources": t,
@@ -192,8 +249,9 @@ class Graph:
             if n.op in RADIX_OPS:
                 total += radix_vectors(n) * sum(
                     r["luts"]
-                    for r in radix_round_plan(n.op, n.attrs["n_digits"],
-                                              n.attrs.get("msg_bits")))
+                    for r in radix_round_plan(
+                        n.op, n.attrs["n_digits"], n.attrs.get("msg_bits"),
+                        term_maxes=n.attrs.get("term_maxes")))
         return total
 
 
@@ -279,6 +337,38 @@ class FheTensor:
         """Two's-complement max(x, 0) over the digit vector."""
         n = self.graph.add("radix_relu", (self.node.id,), self.shape,
                            msg_bits=msg_bits, n_digits=self.shape[-1])
+        return FheTensor(self.graph, n)
+
+    def radix_linear(self, W: np.ndarray, msg_bits: int) -> "FheTensor":
+        """Plaintext integer matmul ACROSS the vector axis of a radix
+        tensor: out[j] = sum_i W[i, j] * self[i] mod 2^bits, each output
+        vector carry-propagated back below base.
+
+        Input shape (V_in, D) -> output (W.shape[1], D); W is an integer
+        (V_in, V_out) matrix (negative weights lower through the base
+        complement, so two's-complement semantics hold as long as the
+        true accumulator magnitude stays below 2^(bits-1) — the
+        `repro.fhe_ml.quantize` range check enforces that bound)."""
+        W = np.asarray(W, np.int64)
+        assert len(self.shape) == 2 and self.shape[0] == W.shape[0], (
+            f"radix_linear needs a (V_in, D) digit tensor matching W rows: "
+            f"{self.shape} vs W {W.shape}")
+        d = self.shape[-1]
+        base = 1 << msg_bits
+        # per-column per-term digit ceilings, recorded for
+        # `radix_round_plan`: |w|*(base-1) per nonzero weight, plus one
+        # trivial term carrying the two's-complement +|w| constants when
+        # the column has negative weights (compression rounds run until
+        # every column is reduced, so the plan needs them all)
+        cols = []
+        for j in range(W.shape[1]):
+            col = [abs(int(w)) * (base - 1) for w in W[:, j] if w]
+            if bool((W[:, j] < 0).any()):
+                col.append(base - 1)
+            cols.append(tuple(col) if col else (0,))
+        n = self.graph.add("radix_linear", (self.node.id,),
+                           (W.shape[1], d), W=W, msg_bits=msg_bits,
+                           n_digits=d, term_maxes=tuple(cols))
         return FheTensor(self.graph, n)
 
     def radix_cmp(self, other, msg_bits: int):

@@ -60,7 +60,8 @@ def _levels(g: Graph) -> dict:
     lvl = {}
     for n in g.nodes:
         depth = (len(radix_round_plan(n.op, n.attrs["n_digits"],
-                                      n.attrs.get("msg_bits")))
+                                      n.attrs.get("msg_bits"),
+                                      term_maxes=n.attrs.get("term_maxes")))
                  if n.op in RADIX_OPS else 1)
         lvl[n.id] = depth + max((lvl[i] for i in n.inputs), default=-1)
     return lvl
@@ -143,8 +144,16 @@ def lower_to_physical(g: Graph, *, ks_dedup: bool = True,
             # tensor-fanout dedup above.
             vecs = radix_vectors(n)
             plan = radix_round_plan(n.op, n.attrs["n_digits"],
-                                    n.attrs.get("msg_bits"))
+                                    n.attrs.get("msg_bits"),
+                                    term_maxes=n.attrs.get("term_maxes"))
             base_lvl = lvl[n.id] - len(plan) + 1
+            if n.op == "radix_linear":
+                # the LPU weight combine that precedes the rounds: one
+                # D-digit scalar-mul/add per nonzero weight
+                macs = int(np.count_nonzero(n.attrs["W"])) \
+                    * n.attrs["n_digits"]
+                ops.append(PhysOp("LIN", n.id, macs, max(base_lvl - 1, 0),
+                                  macs=macs))
             for r, rd in enumerate(plan):
                 luts = rd["luts"] * vecs
                 srcs = rd["sources"] * vecs

@@ -606,6 +606,114 @@ class IntegerContext:
             return RadixCiphertext(spec, digits)
         return self.propagate(RadixCiphertext(spec, digits), max_val=res_max)
 
+    def linear_compress(self, xs: jax.Array, W,
+                        spec: RadixSpec) -> tuple[jax.Array, int]:
+        """Integer-weight linear layer over a batch of radix vectors,
+        reduced to ONE un-propagated digit vector per output column.
+
+        xs: (V_in, D, k*N+1) carry-propagated digit vectors (every digit
+        below base); W: integer (V_in, V_out) matrix.  Returns
+        (digits, max_val): a (V_out, D, k*N+1) array where digits[j]
+        represents sum_i W[i, j] * x_i mod 2^bits with every digit's
+        plaintext value <= max_val — `propagate(..., max_val=max_val)`
+        per output vector finishes the reduction.
+
+        Negative weights lower through the base complement
+        (-w*x = |w|*(~x) + |w|, ~x digitwise base-1-d), with the +|w|
+        constants collected into one trivial digit-vector term per
+        column.  Positive/complement terms then carry-save compress like
+        `mul`'s column reduction: each round greedily merges the terms
+        whose summed per-digit ceiling fits the 2^width window (one
+        group per column), and ALL groups extract (msg, carry) in a
+        single `lut_batch` — the serving scheduler fuses these rounds
+        across concurrent requests like any other radix round."""
+        W = np.asarray(W, np.int64)
+        v_in, v_out = W.shape
+        d, base, m = spec.n_digits, spec.base, spec.msg_bits
+        w_bits = self.params.width
+        window = (1 << w_bits) - 1
+        assert int(xs.shape[0]) == v_in and int(xs.shape[1]) == d, (
+            f"linear_compress: xs {xs.shape} vs W {W.shape} x {d} digits")
+        # any two compressed terms (ceiling (base-1) + window>>m each) must
+        # merge within the window or the reduction stalls: msg_bits == 1
+        # (a 2-bit window) cannot host a linear layer
+        assert 2 * ((base - 1) + (window >> m)) <= window, (
+            f"radix_linear needs carry headroom to merge compressed terms "
+            f"(msg_bits={m}, width={w_bits}; use msg_bits >= 2)")
+
+        terms: list = []                 # per column: [(digit_vec, max)]
+        for j in range(v_out):
+            col: list = []
+            negsum = 0
+            for i in range(v_in):
+                w = int(W[i, j])
+                if w == 0:
+                    continue
+                if w > 0:
+                    ct = xs[i] if w == 1 else lwe.scalar_mul(xs[i], w)
+                    col.append((ct, w * (base - 1)))
+                else:
+                    comp = lwe.sub(self._trivial_digits(spec, base - 1),
+                                   xs[i])
+                    if w < -1:
+                        comp = lwe.scalar_mul(comp, -w)
+                    col.append((comp, (-w) * (base - 1)))
+                    negsum += -w
+            if negsum:
+                digs = torus.encode(jnp.asarray(spec.to_digits(negsum)),
+                                    self.params.delta)
+                col.append((lwe.trivial(digs, self.params.big_n), base - 1))
+            if not col:
+                col.append((self._trivial_digits(spec, 0), 0))
+            for _, mx in col:
+                assert mx <= window, (
+                    f"weight magnitude overflows the digit window "
+                    f"(per-digit ceiling {mx} > {window})")
+            terms.append(col)
+
+        guard = 0
+        max_rounds = 8 * (d + max(len(c) for c in terms)) + 8
+        while any(len(c) > 1 for c in terms):
+            guard += 1
+            assert guard <= max_rounds, "carry-save linear failed to converge"
+            groups = []                  # (col, summed ct, group max)
+            for j in range(v_out):
+                col = terms[j]
+                if len(col) < 2:
+                    continue
+                col.sort(key=lambda tm: tm[1])
+                taken, mx = [], 0
+                while col and mx + col[0][1] <= window:
+                    ct, v = col.pop(0)
+                    taken.append(ct)
+                    mx += v
+                if len(taken) < 2:
+                    # no pair fits the window: solo-extract the LARGEST
+                    # term instead — its ceiling strictly shrinks (it
+                    # must exceed base here, or a pair would have fit),
+                    # whereas re-extracting a small term spins forever
+                    col.extend(zip(taken, [mx] * len(taken)))
+                    col.sort(key=lambda tm: tm[1])
+                    ct, mx = col.pop()
+                    taken = [ct]
+                groups.append((j, sum_cts(taken), mx))
+            gn = len(groups)
+            gcts = jnp.concatenate([g[1] for g in groups], axis=0)
+            batch = jnp.concatenate([gcts, gcts], axis=0)
+            tables = np.concatenate(
+                [np.tile(msg_table(w_bits, m), (gn * d, 1)),
+                 np.tile(carry_table(w_bits, m), (gn * d, 1))])
+            out = self._lut(batch, tables)
+            msgs = out[:gn * d].reshape(gn, d, -1)
+            carries = out[gn * d:].reshape(gn, d, -1)
+            for gi, (j, _, mx) in enumerate(groups):
+                new = msgs[gi].at[1:].add(carries[gi][:-1])
+                terms[j].append((new, (base - 1) + (mx >> m)))
+
+        digits = jnp.stack([c[0][0] for c in terms])
+        max_val = max(c[0][1] for c in terms)
+        return digits, max_val
+
     # -- predicates -----------------------------------------------------------
     def compare(self, a: RadixCiphertext, b: RadixCiphertext) -> jax.Array:
         """Encrypted three-way compare: one ciphertext holding

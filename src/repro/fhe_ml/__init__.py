@@ -1,6 +1,22 @@
 """FHE-ML bridge: post-training quantization of model-zoo blocks, lowering
 to the FHE IR, and real encrypted execution on the JAX TFHE engine —
-the paper's GPT-2-under-FHE demonstration at laptop scale."""
-from repro.fhe_ml.quantize import QuantSpec, quantize_affine, dequantize  # noqa: F401
-from repro.fhe_ml.lower import lower_mlp, lower_gpt2_block  # noqa: F401
+the paper's GPT-2-under-FHE demonstration at laptop scale.
+
+Two activation representations (see docs/ARCHITECTURE.md):
+
+  narrow-LUT  `QuantSpec` affine activations in one width-bit ciphertext,
+              requant PBS per layer (`lower_mlp`, `lower_gpt2_block`).
+  radix       `RadixQuantSpec` 16/32-bit two's-complement activations as
+              digit vectors; exact `radix_linear`/`radix_relu` layers
+              (`lower_mlp_radix`, `lower_gpt2_block_radix`) that run on
+              every `repro.api` backend, including the multi-tenant
+              serving runtime.
+"""
+from repro.fhe_ml.quantize import (QuantSpec, RadixQuantSpec,  # noqa: F401
+                                   calibrate_radix, check_radix_range,
+                                   dequantize, dequantize_radix,
+                                   quantize_affine, quantize_to_radix)
+from repro.fhe_ml.lower import (lower_gpt2_block,  # noqa: F401
+                                lower_gpt2_block_radix, lower_mlp,
+                                lower_mlp_radix)
 from repro.fhe_ml.executor import FheExecutor  # noqa: F401

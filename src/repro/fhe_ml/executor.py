@@ -45,6 +45,13 @@ def _interpret_radix(n, vals: dict) -> np.ndarray:
     if n.op == "radix_cmp":
         return np.array([0 if x == y else (1 if x < y else 2)
                          for x, y in zip(ints_a, ints_b)], np.int64)
+    if n.op == "radix_linear":
+        W = np.asarray(n.attrs["W"], np.int64)
+        res = [int(sum(int(W[i, j]) * ints_a[i]
+                       for i in range(W.shape[0]))) % mod
+               for j in range(W.shape[1])]
+        return np.array([(v >> (i * m)) & (base - 1)
+                         for v in res for i in range(d)], np.int64)
     if n.op == "radix_add":
         res = [(x + y) % mod for x, y in zip(ints_a, ints_b)]
     elif n.op == "radix_sub":

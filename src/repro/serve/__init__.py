@@ -23,7 +23,9 @@ and operation deduplication — into online, cross-request mechanisms:
                fairness, and fault retry through
                `repro.runtime.fault.StepRunner`.
   programs     client-side helpers that trace radix programs into IR
-               and encrypt/decrypt their inputs/outputs.
+               and encrypt/decrypt their inputs/outputs —
+               `fhe_ml_block_program` mints quantized-to-radix
+               transformer blocks (encrypted-LLM traffic, ISSUE 4).
 
 Typical serving loop (see `examples/serve_requests.py` and the
 `benchmarks/serve_throughput.py` requests/sec benchmark):
@@ -34,14 +36,18 @@ Typical serving loop (see `examples/serve_requests.py` and the
     h = rt.submit(g, encrypt_request_inputs(ic, key, [a, b], 16), "alice")
     result = decrypt_radix_output(ic, h.outputs()[0], 16)   # client
 
-Scaling PRs plug in here: sharded serving splits the scheduler's engine
-groups across hosts, elastic capacity resizes `max_inflight`, and
-encrypted-LLM traffic submits `repro.fhe_ml`-lowered graphs through the
-same queue.
+Encrypted-LLM traffic rides the same queue: `fhe_ml_block_program`
+(or `repro.fhe_ml.lower.lower_gpt2_block_radix` directly) lowers a
+transformer block onto 16/32-bit radix activations whose rounds fuse
+with every other in-flight request — see docs/ARCHITECTURE.md for the
+full data path.  Remaining scaling PRs plug in here too: sharded
+serving splits the scheduler's engine groups across hosts, elastic
+capacity resizes `max_inflight`.
 """
 from repro.serve.interpreter import IrInterpreter
 from repro.serve.programs import (decrypt_radix_output,
                                   encrypt_request_inputs,
+                                  fhe_ml_block_program,
                                   radix_binop_program, radix_unop_program)
 from repro.serve.runtime import (AdmissionError, RequestHandle,
                                  RuntimeClosedError, ServeRequest,
@@ -53,5 +59,5 @@ __all__ = [
     "IrInterpreter", "RequestHandle", "RuntimeClosedError",
     "ServeRequest", "ServeRuntime", "SubmitValidationError",
     "decrypt_radix_output", "encrypt_request_inputs",
-    "radix_binop_program", "radix_unop_program",
+    "fhe_ml_block_program", "radix_binop_program", "radix_unop_program",
 ]

@@ -52,6 +52,11 @@ class IrInterpreter:
     registration (a `ServeRuntime` worker) — the vector fan-out then
     parks that slot while it joins, so the barrier never waits on a
     thread that is not computing rounds.
+
+    Example (the in-process serving contract, no queue)::
+
+        interp = IrInterpreter(ctx, engine)
+        outs = interp.run_outputs(program.graph, enc_inputs)
     """
 
     def __init__(self, ctx, engine=None, *,
@@ -85,7 +90,8 @@ class IrInterpreter:
     MAX_FANOUT = 32
 
     def _radix_fanout(self, n, spec, a: jax.Array,
-                      b: Optional[jax.Array], sched) -> list:
+                      b: Optional[jax.Array], sched,
+                      max_val: Optional[int] = None) -> list:
         """Per-vector rounds on concurrent threads sharing `sched`: the
         scheduler barrier fuses them like independent requests."""
         V = int(a.shape[0])
@@ -99,7 +105,7 @@ class IrInterpreter:
                 for v in idx:
                     outs[v] = eval_radix_vector(
                         self.int_ctx, n.op, spec, a[v],
-                        None if b is None else b[v])
+                        None if b is None else b[v], max_val=max_val)
             except BaseException as err:  # noqa: BLE001 — re-raised below
                 errors.append(err)
             finally:
@@ -142,15 +148,22 @@ class IrInterpreter:
         spec = ic.spec(m * d, m)
         width = self.params.big_n + 1
         a = vals[n.inputs[0]].reshape(-1, d, width)
-        b = None
-        if len(n.inputs) == 2:
+        b, mv = None, None
+        if n.op == "radix_linear":
+            # LPU combine + carry-save compress on the request thread (the
+            # extraction rounds batch across ALL output columns, and still
+            # fuse with other in-flight requests through the proxy); only
+            # the final per-vector propagation fans out below
+            a, mv = ic.linear_compress(a, n.attrs["W"], spec)
+        elif len(n.inputs) == 2:
             b = vals[n.inputs[1]].reshape(-1, d, width)
         sched = getattr(self.engine, "_scheduler", None)
         if self.intra_fuse and sched is not None and a.shape[0] > 1:
-            outs = self._radix_fanout(n, spec, a, b, sched)
+            outs = self._radix_fanout(n, spec, a, b, sched, max_val=mv)
         else:
             outs = [eval_radix_vector(ic, n.op, spec, a[v],
-                                      None if b is None else b[v])
+                                      None if b is None else b[v],
+                                      max_val=mv)
                     for v in range(a.shape[0])]
         return jnp.concatenate(outs, axis=0)
 

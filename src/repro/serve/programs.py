@@ -41,6 +41,36 @@ def radix_unop_program(op: str, bits: int, msg_bits: int) -> Graph:
     return trace_program(_UNOPS[op], (IntSpec(bits, msg_bits),)).graph
 
 
+def fhe_ml_block_program(kind: str, d: int, bits: int, msg_bits: int,
+                         seed: int = 0):
+    """Mint encrypted-ML serving traffic: lower an `repro.fhe_ml`
+    transformer block onto `bits`-wide radix activations, ready for
+    `ServeRuntime.submit` / `Session.compile`.
+
+    kind: "gpt2" (single-head block: radix_linear q/k/v, ct*ct attention
+    via radix_mul, ReLU MLP) or "mlp" (two-layer ReLU MLP with random
+    calibration weights).  Returns (graph, meta) exactly as the
+    `repro.fhe_ml.lower` radix lowerings do — meta carries the
+    `input_qmax` range certificate, IntSpec in/out specs and plaintext
+    oracles.  Example::
+
+        g, meta = fhe_ml_block_program("gpt2", d=2, bits=16, msg_bits=2)
+        prog = sess.compile(g, meta["in_specs"], meta["out_specs"])
+        handle = sess.submit(prog, enc_inputs)       # backend="serve"
+    """
+    from repro.fhe_ml import lower
+    if kind == "gpt2":
+        return lower.lower_gpt2_block_radix(d, bits=bits, msg_bits=msg_bits,
+                                            seed=seed)
+    if kind == "mlp":
+        rng = np.random.default_rng(seed)
+        w1 = rng.normal(size=(d, 2 * d)) * 0.5
+        w2 = rng.normal(size=(2 * d, d)) * 0.5
+        return lower.lower_mlp_radix(w1, w2, bits=bits, msg_bits=msg_bits)
+    raise ValueError(f"unknown fhe_ml block kind {kind!r} "
+                     "(have 'gpt2', 'mlp')")
+
+
 def encrypt_request_inputs(ic: IntegerContext, key: jax.Array,
                            values: list, bits: int,
                            msg_bits: int | None = None) -> list:

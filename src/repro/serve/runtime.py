@@ -50,6 +50,9 @@ class RuntimeClosedError(RuntimeError):
 
 @dataclasses.dataclass
 class ServeRequest:
+    """One queued unit of work: a compiled IR graph plus the client's
+    encrypted inputs (one big-key LWE array per graph input node).  The
+    runtime assigns `request_id` at submit."""
     client_id: str
     graph: Graph
     enc_inputs: list
@@ -57,7 +60,17 @@ class ServeRequest:
 
 
 class RequestHandle:
-    """Async result handle for one submitted request."""
+    """Async result handle for one submitted request.
+
+    Example::
+
+        h = runtime.submit(graph, enc_inputs, client_id="alice")
+        while not h.done():
+            ...                       # overlap client-side work
+        cts = h.outputs()             # graph outputs, in order
+
+    `wait()` re-raises the request's terminal error (after the fault
+    layer exhausted its retries); `retries` counts the re-runs."""
 
     def __init__(self, request: ServeRequest):
         self.request = request
@@ -85,6 +98,36 @@ class RequestHandle:
 
 
 class ServeRuntime:
+    """The multi-tenant FHE serving front door.
+
+    Args (all keyword-only beyond ctx/engine):
+      ctx        TFHEContext whose evaluation keys execute the traffic.
+      engine     TaurusEngine to dispatch batched PBS on (defaults to a
+                 fresh engine over ctx's keys).
+      fused      barrier concurrent requests' PBS rounds into shared
+                 `lut_batch` dispatches via a `FusedLutScheduler`.
+      dedup      online (ciphertext, table) row dedup inside fused rounds.
+      max_inflight            concurrent worker threads.
+      max_queued_per_client   backlog cap per client; beyond it `submit`
+                              raises `AdmissionError`.
+      fault / fault_hook      retry policy (`runtime.fault.FaultConfig`)
+                              and a chaos hook called per attempt.
+      start_paused            queue without executing until `resume()`.
+      intra_fuse              fan one request's tensor-level radix nodes
+                              out per vector so they fuse intra-request.
+
+    Example (see also `examples/serve_requests.py` and the encrypted-ML
+    traffic in `examples/fhe_gpt2.py` / `benchmarks/fhe_ml_serve.py`)::
+
+        rt = ServeRuntime(ctx, max_inflight=8)
+        h = rt.submit(graph, enc_inputs, client_id="alice")
+        outputs = h.outputs()        # blocks; ciphertext arrays
+        rt.close()
+
+    Most callers go through `repro.api.Session(ctx, backend="serve")`,
+    which wraps submit/wait behind the portable Program contract.
+    """
+
     def __init__(self, ctx, engine: Optional[TaurusEngine] = None, *,
                  fused: bool = True, dedup: bool = True,
                  max_inflight: int = 8,
@@ -145,6 +188,14 @@ class ServeRuntime:
 
     def submit(self, graph: Graph, enc_inputs: list,
                client_id: str = "client-0") -> RequestHandle:
+        """Queue one request; returns its `RequestHandle` immediately.
+
+        enc_inputs: one (n_elements, k*N+1) big-key LWE array per graph
+        input node (shape-checked at the door; mismatches raise
+        `SubmitValidationError`, a full client queue `AdmissionError`,
+        a closed runtime `RuntimeClosedError`).  The request executes on
+        a worker thread as soon as admission (round-robin across
+        clients, at most `max_inflight` in flight) picks it."""
         with self._lock:
             if self._closed:
                 raise RuntimeClosedError(
@@ -173,6 +224,7 @@ class ServeRuntime:
             self._paused = True
 
     def resume(self) -> None:
+        """Start (or restart) admitting queued requests."""
         with self._lock:
             self._paused = False
             self._admit_locked()

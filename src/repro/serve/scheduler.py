@@ -119,6 +119,15 @@ class FusedLutScheduler:
     can't stall the fleet forever), then the leader dispatches the fused
     round.  Used through `proxy(engine)`, which returns the engine facade
     request interpreters consume.
+
+    Example (what `ServeRuntime` does per worker)::
+
+        sched = FusedLutScheduler(dedup=True)
+        eng = sched.proxy(engine)          # hand to an IrInterpreter
+        sched.register()                   # request becomes barrier-width
+        ...                                # eng.lut_batch calls now fuse
+        sched.unregister()
+        print(sched.dedup_hit_rate, sched.mean_occupancy)
     """
 
     def __init__(self, *, dedup: bool = True, pad_batches: bool = True,

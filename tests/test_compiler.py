@@ -133,6 +133,49 @@ def test_radix_lowering_dedup_and_schedule():
     assert br_levels == sorted(br_levels) and len(set(br_levels)) == len(plan)
 
 
+def test_radix_linear_plan_and_lowering():
+    """`radix_linear` (the quantize-to-radix linear layer) flows through
+    the round-plan model and physical lowering: carry-save compress
+    rounds, then exactly an add-style propagation tail, plus a leading
+    LIN op for the weight combine."""
+    from repro.compiler.ir import radix_round_plan, trace
+
+    d, m = 8, 2
+    # four unit-weight terms + the complement-constant term
+    plan = radix_round_plan("radix_linear", d, m,
+                            term_maxes=(3, 3, 3, 3, 3))
+    tail = radix_round_plan("radix_add", d, m)
+    assert len(plan) > len(tail)
+    assert plan[-len(tail):] == tail
+    for r in plan[:-len(tail)]:              # compress rounds: msg+carry
+        assert r["tables"] == ("radix/msg", "radix/carry")
+    # a single pre-reduced term is just the propagation tail
+    assert radix_round_plan("radix_linear", d, m, term_maxes=(3,)) == tail
+    # regression: ceilings too large to pair must converge through solo
+    # extraction of the largest term (previously looped forever)
+    assert len(radix_round_plan("radix_linear", d, m,
+                                term_maxes=(12, 12))) > len(tail)
+    # regression: round count is the MAX over per-column simulations —
+    # a many-term unit-weight column must not mask a heavy column that
+    # compresses in fewer, bigger steps (or vice versa)
+    both = radix_round_plan("radix_linear", d, m,
+                            term_maxes=((12, 12), (3,) * 8))
+    c0 = radix_round_plan("radix_linear", d, m, term_maxes=((12, 12),))
+    c1 = radix_round_plan("radix_linear", d, m, term_maxes=((3,) * 8,))
+    assert len(both) >= max(len(c0), len(c1))
+
+    rng = np.random.default_rng(2)
+    W = rng.integers(-1, 2, (3, 2))
+    g = trace(lambda x: x.radix_linear(W, m), (3, d))
+    ops, stats = passes.lower_to_physical(g)
+    lin = [op for op in ops if op.kind == "LIN"]
+    assert lin and lin[0].macs == int(np.count_nonzero(W)) * d
+    assert stats.ks_after < stats.ks_before      # msg/carry fanout dedups
+    assert g.lut_applications() > 0
+    sched = build_schedule(ops)
+    assert sched.total_pbs > 0
+
+
 def test_interpret_matches_numpy_linear():
     from repro.fhe_ml.executor import interpret
     rng = np.random.default_rng(0)

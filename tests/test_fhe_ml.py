@@ -5,9 +5,14 @@ import pytest
 
 import jax
 
+from repro.api import Session
 from repro.compiler.ir import trace
+from repro.core.integer import RadixCiphertext
 from repro.fhe_ml import lower, executor
-from repro.fhe_ml.quantize import QuantSpec, calibrate, quantize_affine, dequantize
+from repro.fhe_ml.quantize import (QuantSpec, RadixQuantSpec, calibrate,
+                                   calibrate_radix, check_radix_range,
+                                   dequantize, dequantize_radix,
+                                   quantize_affine, quantize_to_radix)
 
 
 @pytest.fixture()
@@ -87,6 +92,146 @@ def test_encrypted_mlp_matches_oracle(ctx):
     # quantized pipeline approximates the float MLP direction
     f_ref = lower._gelu((xf - in_spec.zero * 0 + 0) @ 0 + 0) if False else None
     assert ex.stats["pbs"] == d_h + d_in
+
+
+# --- quantize-to-radix bridge (ISSUE 4) --------------------------------------
+
+BITS = 8
+MOD = 1 << BITS
+
+
+def _mlp_radix_setup():
+    """Small MLP on 8-bit radix activations (smoke-lane sized)."""
+    rng = np.random.default_rng(0)
+    w1 = rng.normal(size=(2, 3)) * 0.5
+    w2 = rng.normal(size=(3, 2)) * 0.5
+    g, meta = lower.lower_mlp_radix(w1, w2, bits=BITS, msg_bits=2)
+    xf = rng.uniform(-1, 1, size=(2,))
+    rq = calibrate_radix(xf, BITS, 2, qmax=meta["input_qmax"])
+    return g, meta, xf, rq
+
+
+def test_radix_quantize_roundtrip():
+    x = np.linspace(-2.0, 1.5, 33)
+    rq = calibrate_radix(x, 16, 2)
+    q = quantize_to_radix(x, rq)
+    assert int(np.abs(q).max()) <= rq.qmax
+    err = np.abs(dequantize_radix(q, rq) - x)
+    assert float(err.max()) <= rq.scale * 0.51
+    # two's-complement decode: signed ints and their mod-2^bits residues
+    # (what decryption returns) dequantize identically
+    np.testing.assert_allclose(dequantize_radix(q % rq.modulus, rq),
+                               dequantize_radix(q, rq))
+
+
+def test_radix_quantize_saturates_at_calibrated_cap():
+    """Out-of-calibration inputs clip to the certified magnitude, not
+    the full two's-complement range — otherwise a large serving-time
+    activation would silently void the lowering's overflow certificate."""
+    rq = calibrate_radix(np.array([0.5, 1.0]), 8, 2, qmax=20)
+    assert rq.qmax_cal == 20 and rq.clip_max == 20
+    q = quantize_to_radix(np.array([4.0, -4.0]), rq)   # 4x calibration max
+    np.testing.assert_array_equal(q, [20, -20])
+
+
+def test_radix_range_check():
+    check_radix_range(8, 127.0)
+    with pytest.raises(OverflowError):
+        check_radix_range(8, 128.0)
+    # a hopeless lowering: 64-wide dense layers cannot fit 8-bit ints
+    with pytest.raises(OverflowError):
+        lower.lower_mlp_radix(np.ones((64, 64)), np.ones((64, 64)),
+                              bits=8, msg_bits=2)
+
+
+def test_radix_linear_oracle_matches_numpy():
+    """`radix_linear` integer semantics in the keyless oracle: matmul
+    mod 2^bits, including negative weights (base complement)."""
+    rng = np.random.default_rng(5)
+    W = rng.integers(-2, 3, (3, 4))
+    g = trace(lambda x: x.radix_linear(W, 2), (3, 4))
+
+    def digits(v):
+        return [(int(v) % MOD) >> (2 * i) & 3 for i in range(4)]
+
+    xs = np.array([17, -30, 5])
+    inp = np.concatenate([digits(v) for v in xs])
+    out = executor.interpret(g, [inp], 4)[g.outputs[0]].reshape(-1, 4)
+    got = [sum(int(dd) << (2 * i) for i, dd in enumerate(vec))
+           for vec in out]
+    np.testing.assert_array_equal(got, (xs @ W) % MOD)
+
+
+def test_radix_linear_heavy_weights_encrypted(ctx_4bit, engine_4bit):
+    """Regression: weight magnitudes >= 4 under the 4-bit window force
+    the carry-save compression into solo extractions of the largest
+    term (no pair fits); previously this spun until the convergence
+    guard fired.  Encrypted result must still match numpy mod 2^bits."""
+    from repro.api import IntSpec
+    W = np.array([[4, -4], [3, 5], [-2, 1]])
+    g = trace(lambda x: x.radix_linear(W, 2), (3, 4))
+    xs = np.array([17, -30, 5])
+    with Session(ctx_4bit, engine_4bit, backend="eager") as sess:
+        prog = sess.compile(g, [IntSpec(BITS, 2, (3,))],
+                            [IntSpec(BITS, 2, (2,))])
+        got = np.asarray(sess(prog, jax.random.key(7), xs)[0])
+    np.testing.assert_array_equal(got % MOD, (xs @ W) % MOD)
+
+
+@pytest.mark.parametrize("backend", ["eager", "serve"])
+def test_quantize_to_radix_mlp_roundtrip(ctx_4bit, engine_4bit, backend):
+    """The quantize-to-radix acceptance: quantize -> encrypt -> radix
+    linear/activation -> decrypt -> dequantize matches the float oracle
+    within the quantization tolerance, on the eager backend AND through
+    the multi-tenant ServeRuntime, with a noise-budget assertion on the
+    output digits.  Smoke-lane sized (8-bit, 2x3x2 MLP)."""
+    g, meta, xf, rq = _mlp_radix_setup()
+    q = quantize_to_radix(xf, rq)
+    want_ints = meta["int_fn"](q) % MOD
+    with Session(ctx_4bit, engine_4bit, backend=backend) as sess:
+        prog = sess.compile(g, meta["in_specs"], meta["out_specs"])
+        enc = sess.encrypt_inputs(jax.random.key(7), [q], prog)
+        out_cts = sess.run(prog, enc)
+        got = np.asarray(sess.decrypt_outputs(prog, out_cts)[0])
+        # noise budget: every output digit's residual sits well below
+        # half a plaintext slot (the propagation PBS refreshed it)
+        spec = sess.int_ctx.spec(BITS, 2)
+        vecs = out_cts[0].reshape(-1, spec.n_digits, out_cts[0].shape[-1])
+        budget = 1.0 / 2 ** (ctx_4bit.params.width + 2)
+        for vec, w in zip(vecs, want_ints):
+            noise = sess.int_ctx.digit_noise(
+                RadixCiphertext(spec, vec), int(w))
+            assert float(np.max(np.abs(noise))) < budget
+    # bit-exact integer pipeline...
+    np.testing.assert_array_equal(got % MOD, want_ints)
+    # ...and the dequantized floats approximate the float model within
+    # the input-quantization error bound
+    out_rq = RadixQuantSpec(BITS, 2, rq.scale * meta["out_scale_mul"])
+    yhat = dequantize_radix(got, out_rq)
+    assert np.all(np.abs(yhat - meta["float_fn"](xf)) <= meta["tol_fn"](rq))
+
+
+@pytest.mark.slow
+def test_encrypted_gpt2_radix_block_serve_matches_eager(ctx_4bit,
+                                                        engine_4bit):
+    """ISSUE 4 acceptance: a quantized-to-radix GPT-2-style block (ct*ct
+    attention, ReLU MLP, 16-bit activations) submitted through
+    Session(backend='serve') decrypts to the same values as the eager
+    backend, and both match the exact integer oracle."""
+    g, meta = lower.lower_gpt2_block_radix(2, bits=16, msg_bits=2, seed=1)
+    rng = np.random.default_rng(3)
+    xf = rng.uniform(-1, 1, size=(2,))
+    rq = calibrate_radix(xf, 16, 2, qmax=meta["input_qmax"])
+    q = quantize_to_radix(xf, rq)
+    want = meta["int_fn"](q) % (1 << 16)
+    outs = {}
+    for backend in ("eager", "serve"):
+        with Session(ctx_4bit, engine_4bit, backend=backend) as sess:
+            prog = sess.compile(g, meta["in_specs"], meta["out_specs"])
+            outs[backend] = np.asarray(
+                sess(prog, jax.random.key(7), q)[0])
+    np.testing.assert_array_equal(outs["eager"] % (1 << 16), want)
+    np.testing.assert_array_equal(outs["eager"], outs["serve"])
 
 
 @pytest.mark.slow
