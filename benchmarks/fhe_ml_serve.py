@@ -27,6 +27,10 @@ BITS = 16
 MSG_BITS = 2
 WORKLOAD = "fhe_ml_gpt2_block"
 
+# same observability columns as serve_throughput (run.py --dry-run
+# checks both modules declare them)
+from benchmarks.serve_throughput import OBS_COLUMNS as BENCH_COLUMNS  # noqa: E402,F401
+
 
 def run() -> list:
     import jax
@@ -77,11 +81,12 @@ def run() -> list:
         for h, (_, _, want) in zip(handles, jobs):
             got = np.asarray(sess.decrypt_outputs(prog, h.outputs())[0])
             assert np.array_equal(got % (1 << BITS), want), "FHE != oracle"
-        return dt, sess.backend.scheduler
+        return dt, rt
 
     t_warm, _ = wave()                     # compiles the pbs_batch shapes
     print(f"   warm wave {t_warm:5.1f}s (XLA compilation)")
-    dt, sched = wave()
+    dt, rt = wave()
+    sched = rt.scheduler
     row = {
         "bench": "serve", "workload": WORKLOAD,
         "clients": N_CLIENTS, "bits": BITS, "d_model": D_MODEL,
@@ -93,11 +98,15 @@ def run() -> list:
         "logical_luts": sched.stats["logical_luts"],
         "dispatched_luts": sched.stats["dispatched_luts"],
     }
+    from benchmarks.serve_throughput import obs_columns
+    row.update(obs_columns(rt))
     print(f"   measured wave {dt:5.1f}s: "
           f"{row['requests_per_s_fused']:.3f} req/s, "
           f"{row['fused_rounds']} fused rounds, occupancy "
           f"{row['fused_occupancy']:.0%}, dedup hit-rate "
           f"{row['dedup_hit_rate']:.1%}")
+    print(f"   latency p50 {row['p50_s']:.2f}s p99 {row['p99_s']:.2f}s, "
+          f"BSK saved {row['bsk_bytes_saved'] / 1e6:.1f} MB")
     assert row["dedup_hit_rate"] > 0, "replayed client must dedup"
     return [row]
 

@@ -5,7 +5,15 @@
 Writes benchmarks/results.json and prints each table with paper
 comparisons inline.  Serving rows additionally land in
 benchmarks/BENCH_serve.json (requests/sec, fused-batch occupancy, dedup
-hit-rate) so the serving perf trajectory is tracked machine-readably.
+hit-rate, p50/p99 latency, BSK bytes saved) so the serving perf
+trajectory is tracked machine-readably.
+
+Exit code: non-zero when ANY selected benchmark module fails (partial
+results are still written so the surviving rows aren't lost, but a
+partial run must never look green to CI) — `tests/test_obs.py` pins
+this contract.  `--dry-run` additionally checks that both serve
+benchmarks declare the observability columns and that the Chrome-trace
+exporter round-trips.
 """
 from __future__ import annotations
 
@@ -18,33 +26,79 @@ import traceback
 ALL = ["fig5", "table2", "table4", "fig13", "fig15", "dedup", "engine",
        "radix", "serve", "fhe_ml"]
 
+# the observability columns every serve-bench row gained in the
+# repro.obs PR; the dry run fails if a serve benchmark stops declaring
+# them (BENCH_serve.json consumers key on these)
+SERVE_OBS_COLUMNS = ("p50_s", "p99_s", "bsk_bytes_saved")
+SERVE_BENCH_NAMES = ("serve", "fhe_ml")
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
-    ap.add_argument("--dry-run", action="store_true",
-                    help="import every benchmark module and resolve its "
-                         "run() entry point without executing (CI: keeps "
-                         "the entry points from bit-rotting)")
-    args = ap.parse_args(argv)
-    which = args.only.split(",") if args.only else ALL
 
+def _default_mods() -> dict:
     from benchmarks import (fig5_addition, table2_workloads, table4_xpu,
                             fig13_bandwidth, fig15_utilization, dedup_stats,
                             engine_wallclock, fhe_ml_serve, radix_throughput,
                             serve_throughput)
-    mods = {"fig5": fig5_addition, "table2": table2_workloads,
+    return {"fig5": fig5_addition, "table2": table2_workloads,
             "table4": table4_xpu, "fig13": fig13_bandwidth,
             "fig15": fig15_utilization, "dedup": dedup_stats,
             "engine": engine_wallclock, "radix": radix_throughput,
             "serve": serve_throughput, "fhe_ml": fhe_ml_serve}
 
+
+def _dry_run_checks(mods: dict, which: list) -> list:
+    """Entry-point + observability checks, no benchmark execution.
+    Returns a list of problems (empty == pass)."""
+    bad = [f"{n}: missing run()" for n in which
+           if not callable(getattr(mods[n], "run", None))]
+    for n in SERVE_BENCH_NAMES:
+        if n not in which:
+            continue
+        cols = tuple(getattr(mods[n], "BENCH_COLUMNS", ()))
+        missing = [c for c in SERVE_OBS_COLUMNS if c not in cols]
+        if missing:
+            bad.append(f"{n}: BENCH_COLUMNS missing {missing}")
+    # the trace exporter the CI smoke lane relies on must round-trip
+    try:
+        from repro.obs import Telemetry, validate_chrome_trace
+        tel = Telemetry(trace=True)
+        with tel.span("dry_run_check", cat="bench"):
+            pass
+        validate_chrome_trace(json.dumps(tel.chrome_trace()))
+    except Exception as err:  # noqa: BLE001 — any breakage fails the check
+        bad.append(f"chrome-trace exporter: {err!r}")
+    return bad
+
+
+def main(argv=None, mods: dict | None = None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="import every benchmark module, resolve its run() "
+                         "entry point, and check the serve benchmarks' "
+                         "observability columns + trace exporter without "
+                         "executing (CI: keeps the entry points from "
+                         "bit-rotting)")
+    ap.add_argument("--out-dir", default=None,
+                    help="directory for results.json / BENCH_serve.json "
+                         "(default: the benchmarks package directory)")
+    args = ap.parse_args(argv)
+    which = args.only.split(",") if args.only else ALL
+
+    if mods is None:
+        mods = _default_mods()
+    unknown = [n for n in which if n not in mods]
+    if unknown:
+        print(f"[benchmarks] unknown benchmark(s) {unknown} "
+              f"(have {sorted(mods)})")
+        return 2
+
     if args.dry_run:
-        bad = [n for n in which if not callable(getattr(mods[n], "run", None))]
-        print(f"[benchmarks] dry-run: {len(which)} modules importable, "
-              f"{len(bad)} missing run() {bad}")
+        bad = _dry_run_checks(mods, which)
+        print(f"[benchmarks] dry-run: {len(which)} modules checked, "
+              f"{len(bad)} problems {bad}")
         return 1 if bad else 0
 
+    out_dir = args.out_dir or os.path.dirname(__file__)
     results, failed = [], []
     for name in which:
         try:
@@ -52,14 +106,18 @@ def main(argv=None):
         except Exception:
             traceback.print_exc()
             failed.append(name)
-    path = os.path.join(os.path.dirname(__file__), "results.json")
+    path = os.path.join(out_dir, "results.json")
     with open(path, "w") as f:
         json.dump(results, f, indent=1, default=float)
     if any(r.get("bench") == "serve" for r in results):
-        spath = serve_throughput.write_bench_json(results)
+        from benchmarks.serve_throughput import write_bench_json
+        spath = write_bench_json(
+            results, path=os.path.join(out_dir, "BENCH_serve.json"))
         print(f"[benchmarks] serving rows -> {spath}")
     print(f"\n[benchmarks] {len(results)} rows -> {path}; "
           f"{len(failed)} failed {failed}")
+    # a partial run keeps its rows but must exit non-zero: CI treats any
+    # failed module as a red run, not a quieter green one
     return 1 if failed else 0
 
 

@@ -38,6 +38,32 @@ import time
 N_CLIENTS = 8
 BITS = 8
 
+# observability columns every serve-bench row must carry (checked by
+# benchmarks/run.py --dry-run): tail latency from the runtime's
+# serve.request_latency_s histogram, queue pressure, and the bandwidth
+# ledger's key-reuse saving (BSK bytes the fused rounds did NOT stream
+# vs. a per-request server)
+OBS_COLUMNS = ("p50_s", "p99_s", "queue_wait_p99_s", "queue_depth_max",
+               "bsk_bytes_saved", "bsk_bytes_streamed")
+BENCH_COLUMNS = OBS_COLUMNS
+
+
+def obs_columns(runtime) -> dict:
+    """The shared observability columns off one runtime's telemetry
+    snapshot (used by this module and `fhe_ml_serve`)."""
+    snap = runtime.metrics()
+    lat = snap["histograms"]["serve.request_latency_s"]
+    wait = snap["histograms"]["serve.queue_wait_s"]
+    depth = snap["histograms"]["serve.queue_depth"]
+    bw = snap["bandwidth"]
+    return {
+        "p50_s": lat["p50"], "p99_s": lat["p99"],
+        "queue_wait_p99_s": wait["p99"],
+        "queue_depth_max": depth["max"],
+        "bsk_bytes_saved": bw["bsk_bytes_saved"],
+        "bsk_bytes_streamed": bw["bsk_bytes_streamed"],
+    }
+
 
 def write_bench_json(rows: list, path: str | None = None) -> str:
     """Merge serve rows into benchmarks/BENCH_serve.json by workload.
@@ -116,14 +142,14 @@ def run() -> list:
         dt = time.perf_counter() - t0
         for h, (_, _, want) in zip(handles, wave_jobs):
             assert sess.decrypt_outputs(prog, h.outputs())[0] == want, label
-        return dt, sess.backend.scheduler
+        return dt, rt
 
     # Interleave the two modes and take per-mode medians: on shared CPU
     # the machine's effective speed drifts over minutes, and measuring
     # the modes back-to-back once would fold that drift into the ratio.
     reps = 3
     local.run(g, jobs[0][1])                        # warm remaining shapes
-    t_seqs, t_fuseds, sched = [], [], None
+    t_seqs, t_fuseds, rt_fused = [], [], None
     for rep in range(reps):
         # -- baseline: sequential per-request execution ---------------------
         t0 = time.perf_counter()
@@ -133,7 +159,7 @@ def run() -> list:
         t_seqs.append(time.perf_counter() - t0)
 
         # -- fused: cross-request round scheduler ---------------------------
-        t_f, sched = fused_wave(g, jobs, label="fused")
+        t_f, rt_fused = fused_wave(g, jobs, label="fused")
         t_fuseds.append(t_f)
         print(f"  pass {rep + 1}/{reps}: sequential {t_seqs[-1]:5.1f}s, "
               f"fused {t_fuseds[-1]:5.1f}s")
@@ -165,19 +191,20 @@ def run() -> list:
         for h, (_, _, want) in zip(handles, jobs2):
             got = sess.decrypt_outputs(g2, h.outputs())[0]
             assert np.array_equal(got, want)
-        return dt, sess.backend.scheduler
+        return dt, rt
 
     # first pass warms any remaining shapes and is discarded; the median
     # of the measured passes matches the cross-request methodology
     intra_wave()
     intra_runs = [intra_wave() for _ in range(2)]
     t_intra = float(np.median([t for t, _ in intra_runs]))
-    sched_intra = intra_runs[-1][1]
+    sched_intra = intra_runs[-1][1].scheduler
 
     t_seq = float(np.median(t_seqs))
     t_fused = float(np.median(t_fuseds))
     rps_seq = len(jobs) / t_seq
     rps_fused = len(jobs) / t_fused
+    sched = rt_fused.scheduler
     occ_cross = sched.mean_occupancy
     occ_intra = sched_intra.mean_occupancy
     # ISSUE 3 acceptance: flattening one request's tensor-level radix
@@ -201,6 +228,10 @@ def run() -> list:
         "intra_fused_rounds": sched_intra.stats["fused_rounds"],
         "intra_logical_luts": sched_intra.stats["logical_luts"],
     }
+    # tail latency / queue / bandwidth columns from the LAST fused wave's
+    # telemetry (each wave owns a fresh runtime, so the snapshot is one
+    # wave's traffic, not an accumulation across reps)
+    row.update(obs_columns(rt_fused))
     print(f"  sequential: {t_seq:6.1f}s  {rps_seq:5.2f} req/s")
     print(f"  fused:      {t_fused:6.1f}s  {rps_fused:5.2f} req/s  "
           f"({row['speedup']:.2f}x; target >= 2x)")
@@ -211,6 +242,10 @@ def run() -> list:
           f"{row['intra_requests_per_s']:5.2f} req/s, "
           f"{row['intra_fused_rounds']} fused rounds, occupancy "
           f"{occ_intra:.0%} (>= cross-request {occ_cross:.0%})")
+    print(f"  latency p50 {row['p50_s']:.2f}s p99 {row['p99_s']:.2f}s, "
+          f"queue depth max {row['queue_depth_max']:.0f}, "
+          f"BSK saved {row['bsk_bytes_saved'] / 1e6:.1f} MB "
+          f"(streamed {row['bsk_bytes_streamed'] / 1e6:.1f} MB)")
     return [row]
 
 

@@ -134,15 +134,17 @@ class EagerBackend:
     name = "eager"
 
     def __init__(self, ctx, engine=None, *, ks_dedup: bool = True,
-                 acc_dedup: bool = True, pad_batches: bool = True):
+                 acc_dedup: bool = True, pad_batches: bool = True,
+                 telemetry=None):
         from repro.core.engine import TaurusEngine
         self.ctx = ctx
         self.params: TFHEParams = ctx.params
         self.ks_dedup = ks_dedup
         self.acc_dedup = acc_dedup
+        self.telemetry = telemetry
         self.int_ctx = IntegerContext.create(
             ctx, engine or TaurusEngine.from_context(ctx),
-            pad_batches=pad_batches)
+            pad_batches=pad_batches, telemetry=telemetry)
         self.stats = {"pbs": 0, "keyswitch": 0, "lut_polys": 0}
         self._lut_cache: dict = {}
 
@@ -232,14 +234,17 @@ class LocalBackend:
 
     name = "local"
 
-    def __init__(self, ctx, engine=None, *, fused: bool = False):
+    def __init__(self, ctx, engine=None, *, fused: bool = False,
+                 telemetry=None):
         from repro.core.engine import TaurusEngine
         from repro.serve.interpreter import IrInterpreter
         from repro.serve.scheduler import FusedLutScheduler
         engine = engine or TaurusEngine.from_context(ctx)
-        self.scheduler = FusedLutScheduler() if fused else None
+        self.telemetry = telemetry
+        self.scheduler = (FusedLutScheduler(telemetry=telemetry)
+                          if fused else None)
         eng = self.scheduler.proxy(engine) if fused else engine
-        self.interp = IrInterpreter(ctx, eng)
+        self.interp = IrInterpreter(ctx, eng, telemetry=telemetry)
 
     def execute(self, program, enc_inputs: list) -> list:
         return self.interp.run_outputs(program.graph, enc_inputs)
@@ -263,7 +268,13 @@ class ServeBackend:
         self._owns_runtime = runtime is None
         self.runtime = runtime if runtime is not None \
             else ServeRuntime(ctx, engine, **runtime_kw)
+        # the runtime's Telemetry (passed via runtime_kw or its default):
+        # `Session.telemetry` and `metrics()` read through this
+        self.telemetry = self.runtime.telemetry
         self.client_id = client_id
+
+    def metrics(self) -> dict:
+        return self.runtime.metrics()
 
     @property
     def scheduler(self):

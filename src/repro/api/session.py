@@ -92,6 +92,12 @@ class Session:
     constructor (e.g. `max_inflight=8` for "serve", `fused=True` for
     "local").
 
+    telemetry: an optional `repro.obs.Telemetry` threaded through the
+    named backend's whole stack (runtime, scheduler, interpreter,
+    integer context); `Session.metrics()` returns its snapshot and,
+    when traced (`Telemetry(trace=True)`), `telemetry.write_chrome_trace`
+    exports the request spans.
+
     Example (the repo-wide three-step shape; `sess(prog, key, *vals)`
     collapses encrypt -> run -> decrypt)::
 
@@ -106,7 +112,8 @@ class Session:
         prog = sess.compile(g, meta["in_specs"], meta["out_specs"])
     """
 
-    def __init__(self, ctx, engine=None, backend="local", **backend_kw):
+    def __init__(self, ctx, engine=None, backend="local", telemetry=None,
+                 **backend_kw):
         from repro.api.backends import make_backend
         self.ctx = ctx
         self.params = ctx.params
@@ -115,10 +122,21 @@ class Session:
         self.int_ctx = IntegerContext.create(ctx, engine)
         self.engine = self.int_ctx.engine
         if isinstance(backend, str):
+            if telemetry is not None:
+                backend_kw["telemetry"] = telemetry
             backend = make_backend(backend, ctx, self.engine, **backend_kw)
-        elif backend_kw:
-            raise TypeError("backend_kw only applies to named backends")
+        elif backend_kw or telemetry is not None:
+            raise TypeError("backend_kw/telemetry only apply to named "
+                            "backends (pass telemetry to the backend's own "
+                            "constructor instead)")
         self.backend = backend
+        self.telemetry = telemetry if telemetry is not None \
+            else getattr(backend, "telemetry", None)
+
+    def metrics(self) -> dict:
+        """The backend's telemetry snapshot ({} for an un-instrumented
+        backend object)."""
+        return self.telemetry.snapshot() if self.telemetry is not None else {}
 
     # -- trace / compile -----------------------------------------------------
     def trace(self, fn, *in_specs) -> Program:
@@ -194,8 +212,11 @@ class Session:
 
     def submit(self, program: Program, enc_inputs: list,
                client_id: Optional[str] = None):
-        """Async submit (serve backend): returns the request handle.
-        client_id defaults to the backend's configured identity."""
+        """Async submit (serve backend): returns the request handle,
+        whose `output_futures` resolve PER OUTPUT (each with a
+        completion timestamp) as the interpreter materializes them —
+        `handle.outputs()` still joins the whole request.  client_id
+        defaults to the backend's configured identity."""
         submit = getattr(self.backend, "submit", None)
         if submit is None:
             raise TypeError(

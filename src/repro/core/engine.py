@@ -55,8 +55,23 @@ class TaurusEngine:
     mesh: Optional[Mesh] = None
     data_axis: str = "data"
     batch_per_device: int = 12  # paper's round-robin depth (Fig. 13b)
+    # optional repro.obs.Telemetry; None keeps the hot path untouched.
+    # Set explicitly (engine.telemetry = tel) — the serve layer does NOT
+    # auto-attach, so a shared engine never pollutes baseline waves.
+    telemetry: Optional[object] = None
 
     # -- derived -----------------------------------------------------------
+    @property
+    def key_bytes(self) -> tuple:
+        """(bsk_bytes, ksk_bytes) of the evaluation keys as streamed per
+        PBS round — the quantity the bandwidth ledger accounts."""
+        kb = getattr(self, "_key_bytes", None)
+        if kb is None:
+            kb = self._key_bytes = (
+                int(self.bsk_f.size) * self.bsk_f.dtype.itemsize,
+                int(self.ksk.size) * self.ksk.dtype.itemsize)
+        return kb
+
     @property
     def n_clusters(self) -> int:
         if self.mesh is None:
@@ -102,18 +117,32 @@ class TaurusEngine:
         if pad:
             cts = jnp.concatenate([cts, cts[:pad]], axis=0)
             lut_polys = jnp.concatenate([lut_polys, lut_polys[:pad]], axis=0)
-        if self.mesh is None:
-            out = batch_mod.pbs_batch(cts, lut_polys, self.bsk_f, self.ksk, self.params)
-        else:
-            data_sh = NamedSharding(self.mesh, P(self.data_axis))
-            repl = NamedSharding(self.mesh, P())
-            fn = jax.jit(
-                batch_mod.pbs_batch,
-                static_argnames=("params",),
-                in_shardings=(data_sh, data_sh, repl, repl),
-                out_shardings=data_sh,
-            )
-            out = fn(cts, lut_polys, self.bsk_f, self.ksk, self.params)
+        tel = self.telemetry
+        span = (tel.span("lut_batch", cat="engine", rows=B, padded=pad)
+                if tel is not None else None)
+        if span is not None:
+            span.__enter__()
+        try:
+            if self.mesh is None:
+                out = batch_mod.pbs_batch(cts, lut_polys, self.bsk_f, self.ksk, self.params)
+            else:
+                data_sh = NamedSharding(self.mesh, P(self.data_axis))
+                repl = NamedSharding(self.mesh, P())
+                fn = jax.jit(
+                    batch_mod.pbs_batch,
+                    static_argnames=("params",),
+                    in_shardings=(data_sh, data_sh, repl, repl),
+                    out_shardings=data_sh,
+                )
+                out = fn(cts, lut_polys, self.bsk_f, self.ksk, self.params)
+        finally:
+            if span is not None:
+                span.__exit__(None, None, None)
+        if tel is not None:
+            tel.counter("engine.lut_batches").inc()
+            tel.counter("engine.pbs_rows").inc(B + pad)
+            tel.counter("engine.pbs_rows_padded").inc(pad)
+            tel.histogram("engine.lut_batch_rows").observe(B)
         return out[:B]
 
     def lut_batch_tables(self, cts: jax.Array, tables) -> jax.Array:

@@ -261,6 +261,9 @@ class IntegerContext:
     ctx: TFHEContext
     engine: TaurusEngine
     pad_batches: bool = True
+    # optional repro.obs.Telemetry; every nonlinear round publishes
+    # integer.* series into its registry when set
+    telemetry: object = None
     stats: dict = dataclasses.field(default_factory=lambda: {
         "pbs": 0, "lut_batches": 0, "batch_sizes": [], "dispatch_sizes": []})
     _poly_cache: dict = dataclasses.field(default_factory=dict, repr=False)
@@ -330,6 +333,12 @@ class IntegerContext:
             self.stats["pbs"] += b
             self.stats["batch_sizes"].append(b)
             self.stats["dispatch_sizes"].append(int(dispatch.shape[0]))
+        tel = self.telemetry
+        if tel is not None:
+            tel.counter("integer.lut_batches").inc()
+            tel.counter("integer.pbs").inc(b)
+            tel.counter("integer.pbs_dispatched").inc(int(dispatch.shape[0]))
+            tel.histogram("integer.batch_rows").observe(b)
         return out[:b]
 
     def _polys(self, tables: np.ndarray) -> jax.Array:

@@ -35,15 +35,24 @@ class FaultConfig:
 class StepRunner:
     def __init__(self, step_fn: Callable, fault: FaultConfig = FaultConfig(),
                  on_failure: Optional[Callable] = None,
-                 on_straggler: Optional[Callable] = None):
+                 on_straggler: Optional[Callable] = None,
+                 telemetry=None):
         self.step_fn = step_fn
         self.fault = fault
         self.on_failure = on_failure
         self.on_straggler = on_straggler
+        # optional repro.obs.Telemetry: fault.* counters + retry instants
+        # land in the same registry/trace as the serve-path spans
+        self.telemetry = telemetry
         self.durations: list = []
         self.stats = {"retries": 0, "skipped_nonfinite": 0,
                       "straggler_events": 0, "failures": 0}
         self._slow_streak = 0
+
+    def _count(self, key: str) -> None:
+        self.stats[key] += 1
+        if self.telemetry is not None:
+            self.telemetry.counter(f"fault.{key}").inc()
 
     def _median(self) -> float:
         if len(self.durations) < 5:
@@ -59,25 +68,28 @@ class StepRunner:
             try:
                 out = self.step_fn(*args, **kwargs)
             except Exception:
-                self.stats["failures"] += 1
+                self._count("failures")
                 if attempt >= self.fault.max_retries:
                     raise
                 if self.on_failure is not None:
                     args, kwargs = self.on_failure(args, kwargs)
-                self.stats["retries"] += 1
+                self._count("retries")
+                if self.telemetry is not None:
+                    self.telemetry.instant("retry", cat="fault",
+                                           attempt=attempt + 1)
                 continue
             dt = time.monotonic() - t0
             metrics = out[-1] if isinstance(out, tuple) else None
             loss = metrics.get("loss") if isinstance(metrics, dict) else None
             if loss is not None and not bool(np.isfinite(np.asarray(loss))):
-                self.stats["skipped_nonfinite"] += 1
+                self._count("skipped_nonfinite")
                 return None  # caller advances to the next batch
             med = self._median()
             self.durations.append(dt)
             if dt > self.fault.straggler_factor * med:
                 self._slow_streak += 1
                 if self._slow_streak >= self.fault.straggler_patience:
-                    self.stats["straggler_events"] += 1
+                    self._count("straggler_events")
                     self._slow_streak = 0
                     if self.on_straggler is not None:
                         self.on_straggler()

@@ -62,15 +62,18 @@ class IrInterpreter:
     def __init__(self, ctx, engine=None, *,
                  pad_rounds: Optional[bool] = None,
                  intra_fuse: bool = True,
-                 holds_slot: bool = False):
+                 holds_slot: bool = False,
+                 telemetry=None):
         self.ctx = ctx
         self.engine = engine if engine is not None \
             else TaurusEngine.from_context(ctx)
         self.params = ctx.params
         if pad_rounds is None:
             pad_rounds = not getattr(self.engine, "fused", False)
+        self.telemetry = telemetry
         self.int_ctx = IntegerContext(ctx, self.engine,
-                                      pad_batches=pad_rounds)
+                                      pad_batches=pad_rounds,
+                                      telemetry=telemetry)
         self.intra_fuse = intra_fuse
         self.holds_slot = holds_slot
         self._poly_cache: dict = {}
@@ -168,27 +171,36 @@ class IrInterpreter:
         return jnp.concatenate(outs, axis=0)
 
     # -- run ------------------------------------------------------------------
-    def run(self, g: Graph, enc_inputs: list) -> dict:
+    def run(self, g: Graph, enc_inputs: list,
+            on_node=None) -> dict:
         """enc_inputs: one (n_elements, k*N+1) ciphertext array per input
-        node.  Returns {node_id: ciphertext array} for every node."""
+        node.  Returns {node_id: ciphertext array} for every node.
+
+        on_node: optional callback `on_node(node_id, value)` fired the
+        moment each node's value materializes — `ServeRuntime` resolves
+        per-output futures through it, so a request's early outputs are
+        readable while later nodes still execute."""
         vals: dict = {}
         it = iter(enc_inputs)
         for n in g.nodes:
             if n.op == "input":
                 vals[n.id] = next(it)
-                continue
-            out = eval_linear_ct_op(n, vals, self.params)
-            if out is not None:
-                vals[n.id] = out
-            elif n.op == "lut":
-                cts = vals[n.inputs[0]]
-                poly = self._lut_poly(n.attrs["table"])
-                polys = jnp.broadcast_to(poly, (cts.shape[0],) + poly.shape)
-                vals[n.id] = self.engine.lut_batch(cts, polys)
-            elif n.op in RADIX_OPS:
-                vals[n.id] = self._radix(n, vals)
             else:
-                raise ValueError(n.op)
+                out = eval_linear_ct_op(n, vals, self.params)
+                if out is not None:
+                    vals[n.id] = out
+                elif n.op == "lut":
+                    cts = vals[n.inputs[0]]
+                    poly = self._lut_poly(n.attrs["table"])
+                    polys = jnp.broadcast_to(poly,
+                                             (cts.shape[0],) + poly.shape)
+                    vals[n.id] = self.engine.lut_batch(cts, polys)
+                elif n.op in RADIX_OPS:
+                    vals[n.id] = self._radix(n, vals)
+                else:
+                    raise ValueError(n.op)
+            if on_node is not None:
+                on_node(n.id, vals[n.id])
         return vals
 
     def run_outputs(self, g: Graph, enc_inputs: list) -> list:

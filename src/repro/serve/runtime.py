@@ -23,10 +23,12 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
+import time
 from typing import Callable, Optional
 
 from repro.compiler.ir import Graph
 from repro.core.engine import TaurusEngine
+from repro.obs import StatsView, Telemetry
 from repro.runtime.fault import FaultConfig, StepRunner
 from repro.serve.interpreter import IrInterpreter
 from repro.serve.scheduler import FusedLutScheduler
@@ -59,6 +61,57 @@ class ServeRequest:
     request_id: int = -1
 
 
+class OutputFuture:
+    """Completion handle for ONE graph output of one request.
+
+    Resolves the moment the interpreter materializes its node — possibly
+    rounds before the whole request finishes — with a `completed_at`
+    timestamp (perf_counter timebase) that feeds the request's trace
+    span.  Early resolution is sound because graph execution is
+    deterministic over immutable encrypted inputs: an output computed
+    before a later step fails is still the output, and a fault-layer
+    retry skips already-resolved futures.  Only outputs still unresolved
+    when the request exhausts its retries `fail()`."""
+
+    __slots__ = ("node_id", "index", "value", "error", "completed_at",
+                 "_done")
+
+    def __init__(self, node_id: int, index: int):
+        self.node_id = node_id
+        self.index = index                 # position in graph.outputs
+        self.value = None
+        self.error: Optional[BaseException] = None
+        self.completed_at: Optional[float] = None
+        self._done = threading.Event()
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, timeout: Optional[float] = None):
+        """Block until this output is ready; returns its ciphertext array."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"output {self.index} (node {self.node_id}) "
+                               f"not ready")
+        if self.error is not None:
+            raise self.error
+        return self.value
+
+    def resolve(self, value, ts: float) -> bool:
+        """First resolution wins (retries re-visit nodes); returns whether
+        this call was the one that resolved it."""
+        if self._done.is_set():
+            return False
+        self.value = value
+        self.completed_at = ts
+        self._done.set()
+        return True
+
+    def fail(self, err: BaseException) -> None:
+        if not self._done.is_set():
+            self.error = err
+            self._done.set()
+
+
 class RequestHandle:
     """Async result handle for one submitted request.
 
@@ -70,14 +123,28 @@ class RequestHandle:
         cts = h.outputs()             # graph outputs, in order
 
     `wait()` re-raises the request's terminal error (after the fault
-    layer exhausted its retries); `retries` counts the re-runs."""
+    layer exhausted its retries); `retries` counts the re-runs.
+
+    `output_futures` holds one `OutputFuture` per graph output (in
+    output order): each resolves as soon as its node is computed, so a
+    client can stream early outputs while later ones still execute."""
 
     def __init__(self, request: ServeRequest):
         self.request = request
         self.result: Optional[dict] = None
         self.error: Optional[BaseException] = None
         self.retries = 0
+        self.submitted_at: Optional[float] = None   # perf_counter stamps
+        self.admitted_at: Optional[float] = None
+        self.completed_at: Optional[float] = None
         self._done = threading.Event()
+        self.output_futures = [
+            OutputFuture(nid, i)
+            for i, nid in enumerate(request.graph.outputs)]
+        # node id -> futures (a node may be listed as an output twice)
+        self._out_map: dict = {}
+        for f in self.output_futures:
+            self._out_map.setdefault(f.node_id, []).append(f)
 
     def done(self) -> bool:
         return self._done.is_set()
@@ -115,6 +182,9 @@ class ServeRuntime:
       start_paused            queue without executing until `resume()`.
       intra_fuse              fan one request's tensor-level radix nodes
                               out per vector so they fuse intra-request.
+      telemetry               a `repro.obs.Telemetry`; defaults to a
+                              private metrics-only one (tracing off).
+                              `metrics()` returns its snapshot.
 
     Example (see also `examples/serve_requests.py` and the encrypted-ML
     traffic in `examples/fhe_gpt2.py` / `benchmarks/fhe_ml_serve.py`)::
@@ -135,12 +205,16 @@ class ServeRuntime:
                  fault: Optional[FaultConfig] = None,
                  fault_hook: Optional[Callable] = None,
                  start_paused: bool = False,
-                 intra_fuse: bool = True):
+                 intra_fuse: bool = True,
+                 telemetry: Optional[Telemetry] = None):
         self.ctx = ctx
         self.engine = engine if engine is not None \
             else TaurusEngine.from_context(ctx)
         self.fused = fused
-        self.scheduler = FusedLutScheduler(dedup=dedup) if fused else None
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.scheduler = (FusedLutScheduler(dedup=dedup,
+                                            telemetry=self.telemetry)
+                          if fused else None)
         self.fault = fault if fault is not None else FaultConfig(max_retries=2)
         # fuse the per-vector rounds of one request's tensor-level radix
         # nodes through the shared scheduler (IrInterpreter fan-out)
@@ -159,11 +233,32 @@ class ServeRuntime:
         self._paused = start_paused
         self._closed = False
         self._threads: list = []
+        tel = self.telemetry
+        self._c = {k: tel.counter(f"serve.{k}")
+                   for k in ("admitted", "completed", "failed",
+                             "retries", "rejected", "invalid")}
+        self._h_latency = tel.histogram("serve.request_latency_s")
+        self._h_queue_wait = tel.histogram("serve.queue_wait_s")
+        self._h_queue_depth = tel.histogram("serve.queue_depth")
+        self._g_queue_depth = tel.gauge("serve.queue_depth")
         # "admitted" is an observability log (fairness tests/monitoring),
         # bounded so a long-lived server doesn't grow per-request state
-        self.stats = {"admitted": collections.deque(maxlen=10_000),
-                      "completed": 0, "failed": 0,
-                      "retries": 0, "rejected": 0, "invalid": 0}
+        self._admitted_log: collections.deque = collections.deque(
+            maxlen=10_000)
+
+    @property
+    def stats(self) -> StatsView:
+        """Backward-compatible stats mapping: the historical dict keys
+        (`admitted` deque log; `completed`/`failed`/`retries`/`rejected`/
+        `invalid` counts), read live off the metrics registry."""
+        sources: dict = dict(self._c)
+        sources["admitted"] = self._admitted_log
+        return StatsView(sources)
+
+    def metrics(self) -> dict:
+        """The full telemetry snapshot: serve.*, sched.*, integer.*
+        counters/gauges/histograms plus the bandwidth ledger."""
+        return self.telemetry.snapshot()
 
     # -- client API ----------------------------------------------------------
     def _validate_submit(self, graph: Graph, enc_inputs: list) -> None:
@@ -172,7 +267,7 @@ class ServeRuntime:
         worker-thread failures that the fault layer retries."""
         in_nodes = [n for n in graph.nodes if n.op == "input"]
         if len(enc_inputs) != len(in_nodes):
-            self.stats["invalid"] += 1
+            self._c["invalid"].inc()
             raise SubmitValidationError(
                 f"graph has {len(in_nodes)} input nodes but "
                 f"{len(enc_inputs)} encrypted inputs were submitted")
@@ -180,7 +275,7 @@ class ServeRuntime:
         for node, arr in zip(in_nodes, enc_inputs):
             shape = tuple(getattr(arr, "shape", ()))
             if len(shape) != 2 or shape != (node.n_elements, ct_width):
-                self.stats["invalid"] += 1
+                self._c["invalid"].inc()
                 raise SubmitValidationError(
                     f"input for node {node.id} (shape {node.shape}): "
                     f"expected a ({node.n_elements}, {ct_width}) big-key "
@@ -204,7 +299,7 @@ class ServeRuntime:
             queued = len(self._queues.get(client_id, ()))
             if (self.max_queued_per_client is not None
                     and queued >= self.max_queued_per_client):
-                self.stats["rejected"] += 1
+                self._c["rejected"].inc()
                 raise AdmissionError(
                     f"client {client_id!r} already has {queued} queued "
                     f"requests (cap {self.max_queued_per_client})")
@@ -212,9 +307,15 @@ class ServeRuntime:
             req = ServeRequest(client_id, graph, enc_inputs, self._next_id)
             self._next_id += 1
             handle = RequestHandle(req)
+            handle.submitted_at = time.perf_counter()
             q.append(handle)
             if client_id not in self._client_ring:
                 self._client_ring.append(client_id)
+            self.telemetry.instant("submit", cat="serve",
+                                   request=req.request_id, client=client_id)
+            depth = sum(len(qq) for qq in self._queues.values())
+            self._g_queue_depth.set(depth)
+            self._h_queue_depth.observe(depth)
             self._admit_locked()
         return handle
 
@@ -262,8 +363,15 @@ class ServeRuntime:
                 # register BEFORE the worker starts so a wave of
                 # admissions forms one full fusion barrier
                 self.scheduler.register()
-            self.stats["admitted"].append(
+            handle.admitted_at = time.perf_counter()
+            self._c["admitted"].inc()
+            self._admitted_log.append(
                 (handle.request.client_id, handle.request.request_id))
+            self.telemetry.instant("admit", cat="serve",
+                                   request=handle.request.request_id,
+                                   client=handle.request.client_id)
+            self._g_queue_depth.set(
+                sum(len(q) for q in self._queues.values()))
             t = threading.Thread(target=self._worker, args=(handle,),
                                  daemon=True)
             self._threads.append(t)
@@ -293,42 +401,82 @@ class ServeRuntime:
     # -- execution -----------------------------------------------------------
     def _worker(self, handle: RequestHandle) -> None:
         req = handle.request
-        try:
-            eng = self.scheduler.proxy(self.engine) if self.fused \
-                else self.engine
-            interp = IrInterpreter(self.ctx, eng,
-                                   intra_fuse=self.intra_fuse,
-                                   holds_slot=self.fused)
-            attempt = {"n": 0}
-
-            def step():
-                attempt["n"] += 1
-                if self.fault_hook is not None:
-                    self.fault_hook(req, attempt["n"])
-                return interp.run(req.graph, req.enc_inputs)
-
-            runner = StepRunner(step, self.fault)
+        tel = self.telemetry
+        # backfill the queue-wait interval (its endpoints were stamped by
+        # the submitting thread and the admitting thread) onto this lane,
+        # BEFORE the request span opens so the two stay disjoint siblings
+        if handle.submitted_at is not None and handle.admitted_at is not None:
+            wait_s = handle.admitted_at - handle.submitted_at
+            tel.record("queue_wait", "serve", handle.submitted_at, wait_s,
+                       request=req.request_id, client=req.client_id)
+            self._h_queue_wait.observe(wait_s)
+        span = tel.span("request", cat="serve", request=req.request_id,
+                        client=req.client_id)
+        with span:
             try:
-                handle.result = runner.run()
+                eng = self.scheduler.proxy(self.engine) if self.fused \
+                    else self.engine
+                interp = IrInterpreter(self.ctx, eng,
+                                       intra_fuse=self.intra_fuse,
+                                       holds_slot=self.fused,
+                                       telemetry=tel)
+                attempt = {"n": 0}
+
+                def on_node(node_id, value):
+                    futs = handle._out_map.get(node_id)
+                    if not futs:
+                        return
+                    ts = time.perf_counter()
+                    for f in futs:
+                        if f.resolve(value, ts):
+                            tel.instant("output_ready", cat="serve",
+                                        request=req.request_id,
+                                        output=f.index)
+
+                def step():
+                    attempt["n"] += 1
+                    if self.fault_hook is not None:
+                        self.fault_hook(req, attempt["n"])
+                    return interp.run(req.graph, req.enc_inputs,
+                                      on_node=on_node)
+
+                runner = StepRunner(step, self.fault, telemetry=tel)
+                try:
+                    handle.result = runner.run()
+                finally:
+                    # count retries whether the request ultimately succeeded
+                    # or exhausted its budget — retry storms from poisoned
+                    # requests must show up in the stats
+                    handle.retries = runner.stats["retries"]
+            except BaseException as err:  # noqa: BLE001 — via handle
+                handle.error = err
             finally:
-                # count retries whether the request ultimately succeeded
-                # or exhausted its budget — retry storms from poisoned
-                # requests must show up in the stats
-                handle.retries = runner.stats["retries"]
-        except BaseException as err:  # noqa: BLE001 — surfaced via handle
-            handle.error = err
-        finally:
-            if self.fused:
-                self.scheduler.unregister()
-            with self._lock:
-                self._inflight -= 1
-                self.stats["retries"] += handle.retries
+                handle.completed_at = time.perf_counter()
                 if handle.error is None:
-                    self.stats["completed"] += 1
+                    # outputs the interpreter resolved early keep their
+                    # timestamps; the rest (e.g. passthrough inputs)
+                    # resolve now from the final result
+                    for f in handle.output_futures:
+                        f.resolve(handle.result[f.node_id],
+                                  handle.completed_at)
                 else:
-                    self.stats["failed"] += 1
-                self._threads = [t for t in self._threads
-                                 if t.is_alive()
-                                 and t is not threading.current_thread()]
-                self._admit_locked()
-            handle._done.set()
+                    for f in handle.output_futures:
+                        f.fail(handle.error)
+                if self.fused:
+                    self.scheduler.unregister()
+                outcome = "completed" if handle.error is None else "failed"
+                span.set(retries=handle.retries, outcome=outcome)
+                tel.instant(outcome, cat="serve", request=req.request_id,
+                            client=req.client_id)
+                if handle.submitted_at is not None:
+                    self._h_latency.observe(
+                        handle.completed_at - handle.submitted_at)
+                with self._lock:
+                    self._inflight -= 1
+                    self._c["retries"].inc(handle.retries)
+                    self._c[outcome].inc()
+                    self._threads = [t for t in self._threads
+                                     if t.is_alive()
+                                     and t is not threading.current_thread()]
+                    self._admit_locked()
+                handle._done.set()

@@ -36,6 +36,7 @@ from repro.compiler.passes import fused_round_dedup
 from repro.core import glwe
 from repro.core.engine import TaurusEngine, validate_lut_tables
 from repro.core.integer import _pad_batch
+from repro.obs import StatsView, Telemetry, engine_key_bytes
 
 
 @dataclasses.dataclass
@@ -47,6 +48,7 @@ class _Pending:
     keys: Optional[list] = None     # per-row (ct, poly) dedup digests
     result: Optional[jax.Array] = None
     error: Optional[BaseException] = None
+    round_id: Optional[int] = None  # fused batch id, set by the leader
 
 
 def _row_keys(cts: jax.Array, polys: jax.Array) -> list:
@@ -131,22 +133,45 @@ class FusedLutScheduler:
     """
 
     def __init__(self, *, dedup: bool = True, pad_batches: bool = True,
-                 max_wait_s: float = 10.0):
+                 max_wait_s: float = 10.0,
+                 telemetry: Optional[Telemetry] = None):
         self.dedup = dedup
         self.pad_batches = pad_batches
         self.max_wait_s = max_wait_s
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
         self._cv = threading.Condition()
         self._active = 0
         self._pending: list = []
-        self.stats = {
-            "fused_rounds": 0,       # engine-group dispatches
-            "logical_luts": 0,       # rows requested by interpreters
-            "dispatched_luts": 0,    # rows after dedup, before padding
-            "padded_luts": 0,        # rows entering engine.lut_batch
-            "dedup_hits": 0,
-            # blocked requests / active requests, bounded observability log
-            "occupancy": collections.deque(maxlen=10_000),
+        self._round_seq = 0
+        tel = self.telemetry
+        self._c = {
+            "fused_rounds": tel.counter("sched.fused_rounds"),
+            "logical_luts": tel.counter("sched.logical_luts"),
+            "dispatched_luts": tel.counter("sched.dispatched_luts"),
+            "padded_luts": tel.counter("sched.padded_luts"),
+            "dedup_hits": tel.counter("sched.dedup_hits"),
         }
+        self._occ_hist = tel.histogram("sched.occupancy")
+        # blocked requests / active requests, bounded observability log
+        self._occupancy: collections.deque = collections.deque(maxlen=10_000)
+        # per-engine (bsk, ksk) byte sizes, resolved once per engine
+        self._key_bytes: dict = {}
+
+    @property
+    def stats(self) -> StatsView:
+        """Backward-compatible stats mapping: the historical dict keys,
+        now read live off the metrics registry counters.
+
+        fused_rounds      engine-group dispatches
+        logical_luts      rows requested by interpreters
+        dispatched_luts   rows after dedup, before padding
+        padded_luts       rows entering engine.lut_batch
+        dedup_hits        rows removed by online (ct, LUT) dedup
+        occupancy         bounded deque of per-round occupancy samples
+        """
+        sources: dict = dict(self._c)
+        sources["occupancy"] = self._occupancy
+        return StatsView(sources)
 
     # -- lifecycle -----------------------------------------------------------
     def proxy(self, engine: TaurusEngine) -> FusedEngineProxy:
@@ -166,12 +191,12 @@ class FusedLutScheduler:
     # -- metrics -------------------------------------------------------------
     @property
     def dedup_hit_rate(self) -> float:
-        n = self.stats["logical_luts"]
-        return self.stats["dedup_hits"] / n if n else 0.0
+        n = self._c["logical_luts"].value
+        return self._c["dedup_hits"].value / n if n else 0.0
 
     @property
     def mean_occupancy(self) -> float:
-        occ = self.stats["occupancy"]
+        occ = self._occupancy
         return float(np.mean(occ)) if occ else 0.0
 
     # -- the blocking round entry -------------------------------------------
@@ -180,26 +205,30 @@ class FusedLutScheduler:
         entry = _Pending(engine, cts, polys,
                          keys if self.dedup else None)
         deadline = time.monotonic() + self.max_wait_s
-        with self._cv:
-            self._pending.append(entry)
-            while entry.result is None and entry.error is None:
-                if self._pending and len(self._pending) >= self._active:
-                    self._dispatch_locked()     # barrier complete: lead
-                    continue
-                if time.monotonic() >= deadline:
-                    if entry in self._pending:
-                        # straggler timeout: flush a partial round rather
-                        # than stall the fleet forever
-                        self._dispatch_locked()
+        with self.telemetry.span("pbs_round", cat="sched",
+                                 rows=int(cts.shape[0])) as sp:
+            with self._cv:
+                self._pending.append(entry)
+                while entry.result is None and entry.error is None:
+                    if self._pending and len(self._pending) >= self._active:
+                        self._dispatch_locked()     # barrier complete: lead
                         continue
-                    # our entry is owned by an in-flight dispatch (lock
-                    # released by its leader) — don't flush OTHER
-                    # requests' fresh entries solo or spin; just wait
-                    deadline = time.monotonic() + self.max_wait_s
-                # leaders/unregister notify promptly; the timeout only
-                # bounds how late a deadline-triggered partial dispatch
-                # can fire
-                self._cv.wait(timeout=0.25)
+                    if time.monotonic() >= deadline:
+                        if entry in self._pending:
+                            # straggler timeout: flush a partial round rather
+                            # than stall the fleet forever
+                            self._dispatch_locked()
+                            continue
+                        # our entry is owned by an in-flight dispatch (lock
+                        # released by its leader) — don't flush OTHER
+                        # requests' fresh entries solo or spin; just wait
+                        deadline = time.monotonic() + self.max_wait_s
+                    # leaders/unregister notify promptly; the timeout only
+                    # bounds how late a deadline-triggered partial dispatch
+                    # can fire
+                    self._cv.wait(timeout=0.25)
+            # the fused batch id this round landed in (the leader stamps it)
+            sp.set(round=entry.round_id)
         if entry.error is not None:
             raise RuntimeError("fused PBS round failed") from entry.error
         return entry.result
@@ -209,63 +238,91 @@ class FusedLutScheduler:
         pending, self._pending = self._pending, []
         if not pending:
             return
-        self.stats["occupancy"].append(
-            len(pending) / max(self._active, len(pending)))
+        occupancy = len(pending) / max(self._active, len(pending))
+        self._occupancy.append(occupancy)
+        self._occ_hist.observe(occupancy)
         groups: dict = {}
         for e in pending:
             groups.setdefault(id(e.engine), []).append(e)
+        # assign fused batch ids while the lock is still held (the seq
+        # counter is lock-protected state) so blocked requests see them
+        # the moment their result lands
+        rounds: list = []
+        for entries in groups.values():
+            rid = self._round_seq
+            self._round_seq += 1
+            for e in entries:
+                e.round_id = rid
+            rounds.append((rid, entries))
         # the heavy part (the dispatch may trigger an XLA compile) runs
         # with the lock RELEASED so new requests can register/enqueue for
         # the next round meanwhile; the popped entries are owned by this
-        # leader alone, and stats deltas are folded back in UNDER the
-        # lock (a straggler-timeout leader can run concurrently)
-        deltas: list = []
+        # leader alone, and the metric counters take their own locks (a
+        # straggler-timeout leader can run concurrently)
         self._cv.release()
         try:
-            for entries in groups.values():
+            for rid, entries in rounds:
                 try:
-                    deltas.append(
-                        self._dispatch_group(entries[0].engine, entries))
+                    self._dispatch_group(entries[0].engine, entries, rid,
+                                         occupancy)
                 except BaseException as err:  # noqa: BLE001 — fan it out
                     for e in entries:
                         e.error = err
         finally:
             self._cv.acquire()
-        for d in deltas:
-            for k, v in d.items():
-                self.stats[k] += v
         self._cv.notify_all()
 
-    def _dispatch_group(self, engine: TaurusEngine, entries: list) -> dict:
-        """One fused lut_batch for every round sharing this engine's BSK.
-        Returns the stats delta (folded into self.stats under the lock)."""
+    def _engine_key_bytes(self, engine: TaurusEngine) -> tuple:
+        kb = self._key_bytes.get(id(engine))
+        if kb is None:
+            kb = self._key_bytes[id(engine)] = (
+                engine.key_bytes if hasattr(engine, "key_bytes")
+                else engine_key_bytes(engine))
+        return kb
+
+    def _dispatch_group(self, engine: TaurusEngine, entries: list,
+                        round_id: int, occupancy: float) -> None:
+        """One fused lut_batch for every round sharing this engine's BSK;
+        publishes round composition metrics and the bandwidth ledger row."""
+        tel = self.telemetry
         cts = jnp.concatenate([e.cts for e in entries], axis=0)
         polys = jnp.concatenate([e.polys for e in entries], axis=0)
         n = int(cts.shape[0])
-        delta = {"fused_rounds": 1, "logical_luts": n, "dedup_hits": 0}
-        inverse = None
-        if self.dedup:
-            keys: list = []
-            for e in entries:   # workers pre-hash; direct submits fall back
-                keys.extend(e.keys if e.keys is not None
-                            else _row_keys(e.cts, e.polys))
-            unique_idx, inverse, hits = fused_round_dedup(keys)
-            delta["dedup_hits"] = hits
-            if hits:
-                sel = np.asarray(unique_idx)
-                cts, polys = cts[sel], polys[sel]
-            else:
-                inverse = None
-        nb = int(cts.shape[0])
-        delta["dispatched_luts"] = nb
-        if self.pad_batches:
-            p = _pad_batch(nb)
-            if p > nb:                      # tile real rows to a reusable
-                reps = -(-p // nb)          # compiled batch shape
-                cts = jnp.tile(cts, (reps, 1))[:p]
-                polys = jnp.tile(polys, (reps, 1))[:p]
-        delta["padded_luts"] = int(cts.shape[0])
-        out = engine.lut_batch(cts, polys)[:nb]
+        hits = 0
+        with tel.span("fused_round", cat="sched", round=round_id,
+                      participants=len(entries), rows=n,
+                      occupancy=occupancy) as sp:
+            inverse = None
+            if self.dedup:
+                keys: list = []
+                for e in entries:  # workers pre-hash; direct submits fall back
+                    keys.extend(e.keys if e.keys is not None
+                                else _row_keys(e.cts, e.polys))
+                unique_idx, inverse, hits = fused_round_dedup(keys)
+                if hits:
+                    sel = np.asarray(unique_idx)
+                    cts, polys = cts[sel], polys[sel]
+                else:
+                    inverse = None
+            nb = int(cts.shape[0])
+            if self.pad_batches:
+                p = _pad_batch(nb)
+                if p > nb:                      # tile real rows to a reusable
+                    reps = -(-p // nb)          # compiled batch shape
+                    cts = jnp.tile(cts, (reps, 1))[:p]
+                    polys = jnp.tile(polys, (reps, 1))[:p]
+            padded = int(cts.shape[0])
+            sp.set(dedup_hits=hits, dispatched=nb, padded=padded)
+            out = engine.lut_batch(cts, polys)[:nb]
+        self._c["fused_rounds"].inc()
+        self._c["logical_luts"].inc(n)
+        self._c["dedup_hits"].inc(hits)
+        self._c["dispatched_luts"].inc(nb)
+        self._c["padded_luts"].inc(padded)
+        bsk_b, ksk_b = self._engine_key_bytes(engine)
+        tel.bandwidth.account_round(
+            participants=len(entries), rows_logical=n, rows_dispatched=nb,
+            rows_padded=padded, bsk_bytes=bsk_b, ksk_bytes=ksk_b)
         if inverse is not None:
             out = out[np.asarray(inverse)]
         ofs = 0
@@ -273,4 +330,3 @@ class FusedLutScheduler:
             b = int(e.cts.shape[0])
             e.result = out[ofs:ofs + b]
             ofs += b
-        return delta
