@@ -24,7 +24,7 @@ import sys
 import traceback
 
 ALL = ["fig5", "table2", "table4", "fig13", "fig15", "dedup", "engine",
-       "radix", "serve", "fhe_ml"]
+       "radix", "serve", "fhe_ml", "sim"]
 
 # the observability columns every serve-bench row gained in the
 # repro.obs PR; the dry run fails if a serve benchmark stops declaring
@@ -32,17 +32,23 @@ ALL = ["fig5", "table2", "table4", "fig13", "fig15", "dedup", "engine",
 SERVE_OBS_COLUMNS = ("p50_s", "p99_s", "bsk_bytes_saved")
 SERVE_BENCH_NAMES = ("serve", "fhe_ml")
 
+# the SLO columns every sim row must carry (BENCH_sim.json consumers
+# key on these; the repro.sim PR's dry-run contract)
+SIM_SLO_COLUMNS = ("p50_s", "p99_s", "queue_wait_p99_s", "abandon_rate",
+                   "goodput_rps", "slo_ok", "virtual_deterministic")
+
 
 def _default_mods() -> dict:
     from benchmarks import (fig5_addition, table2_workloads, table4_xpu,
                             fig13_bandwidth, fig15_utilization, dedup_stats,
                             engine_wallclock, fhe_ml_serve, radix_throughput,
-                            serve_throughput)
+                            serve_throughput, sim_slo)
     return {"fig5": fig5_addition, "table2": table2_workloads,
             "table4": table4_xpu, "fig13": fig13_bandwidth,
             "fig15": fig15_utilization, "dedup": dedup_stats,
             "engine": engine_wallclock, "radix": radix_throughput,
-            "serve": serve_throughput, "fhe_ml": fhe_ml_serve}
+            "serve": serve_throughput, "fhe_ml": fhe_ml_serve,
+            "sim": sim_slo}
 
 
 def _dry_run_checks(mods: dict, which: list) -> list:
@@ -57,6 +63,11 @@ def _dry_run_checks(mods: dict, which: list) -> list:
         missing = [c for c in SERVE_OBS_COLUMNS if c not in cols]
         if missing:
             bad.append(f"{n}: BENCH_COLUMNS missing {missing}")
+    if "sim" in which:
+        cols = tuple(getattr(mods["sim"], "BENCH_COLUMNS", ()))
+        missing = [c for c in SIM_SLO_COLUMNS if c not in cols]
+        if missing:
+            bad.append(f"sim: BENCH_COLUMNS missing {missing}")
     # the trace exporter the CI smoke lane relies on must round-trip
     try:
         from repro.obs import Telemetry, validate_chrome_trace
@@ -114,6 +125,11 @@ def main(argv=None, mods: dict | None = None):
         spath = write_bench_json(
             results, path=os.path.join(out_dir, "BENCH_serve.json"))
         print(f"[benchmarks] serving rows -> {spath}")
+    if any(r.get("bench") == "sim" for r in results):
+        from benchmarks.sim_slo import write_bench_json as write_sim_json
+        spath = write_sim_json(
+            results, path=os.path.join(out_dir, "BENCH_sim.json"))
+        print(f"[benchmarks] sim SLO rows -> {spath}")
     print(f"\n[benchmarks] {len(results)} rows -> {path}; "
           f"{len(failed)} failed {failed}")
     # a partial run keeps its rows but must exit non-zero: CI treats any

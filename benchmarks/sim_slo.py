@@ -1,0 +1,233 @@
+"""Traffic-simulation SLO suite: the `repro.sim` scenario harness end
+to end on REAL ciphertexts.
+
+    PYTHONPATH=src python -m benchmarks.sim_slo [--smoke]
+
+For every scenario in `repro.sim.standard_suite` (steady / burst /
+overload / mixed_tenant / closed_loop):
+
+  1. replay it twice through the deterministic virtual-time simulator
+     and assert the two reports are identical field for field (the
+     seeded-determinism contract);
+  2. drive it against a real `ServeRuntime` — arrival times paced onto
+     the wall clock, every request a compiled radix program over
+     big-key ciphertexts, every completed payload decrypted and checked
+     against the workload's integer oracle;
+  3. evaluate the SLO targets per phase from `Snapshot.diff` metric
+     windows and record the verdict.
+
+Arrival rates anchor to measured capacity (one warm radix-add request
+timed through the interpreter), so "overload" is 3x THIS machine's
+capacity, not a magic number.  The overload scenario is EXPECTED to
+breach its SLO (expect_ok=False) and ends through the fail-fast
+`close(drain=False)` path; a run is healthy when every scenario's
+verdict matches its expectation.
+
+Outputs: rows in benchmarks/BENCH_sim.json (measured SLO columns per
+scenario) and the full per-phase reports — real and virtual — in
+benchmarks/SIM_SLO_REPORT.json (the CI artifact).
+
+--smoke runs one tiny 5-second scenario (cheap const-op analytics plus
+a few PBS adds) plus the virtual determinism sweep — the CI smoke-lane
+entry.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+MAX_INFLIGHT = 4
+
+# SLO columns every sim row carries (checked by benchmarks/run.py
+# --dry-run, same contract as the serve benchmarks' OBS columns)
+BENCH_COLUMNS = ("p50_s", "p99_s", "queue_wait_p99_s", "abandon_rate",
+                 "goodput_rps", "slo_ok", "as_expected",
+                 "virtual_deterministic")
+
+
+def write_bench_json(rows: list, path: str | None = None) -> str:
+    """Merge sim rows into benchmarks/BENCH_sim.json by scenario name
+    (re-running a subset must not clobber the other scenarios' rows)."""
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "BENCH_sim.json")
+    rows = [r for r in rows if r.get("bench") == "sim"]
+    existing = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f)
+        except (OSError, ValueError):
+            existing = []
+    fresh = {r.get("scenario") for r in rows}
+    keep = [r for r in existing if r.get("scenario") not in fresh]
+    with open(path, "w") as f:
+        json.dump(keep + rows, f, indent=1, default=float)
+    return path
+
+
+def write_report_json(reports: list, path: str | None = None) -> str:
+    """Full per-phase SLO reports (real + virtual) — the CI artifact."""
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__),
+                            "SIM_SLO_REPORT.json")
+    with open(path, "w") as f:
+        json.dump(reports, f, indent=1, default=float)
+    return path
+
+
+def _measure_capacity(ctx, engine, bits: int, msg_bits: int) -> float:
+    """Serving capacity anchor: push a small fleet of arith-mix
+    requests (2 adds : 1 mul, the suite's PBS-heavy mix) through a
+    throwaway `ServeRuntime` at full concurrency and measure the WARM
+    fused throughput.  A single-request probe would overestimate badly
+    — the mix's muls are several times an add, and concurrent rounds
+    share fused batches — so the anchor must be the fleet rate the
+    runtime actually sustains.  Derated 20% for scheduling headroom and
+    clamped so scenario request counts stay bounded on extreme
+    machines."""
+    import random
+
+    import jax
+    from repro.core.integer import IntegerContext
+    from repro.serve import ServeRuntime
+    from repro.sim.workloads import radix_add, radix_mul
+
+    rt = ServeRuntime(ctx, engine, max_inflight=MAX_INFLIGHT)
+    try:
+        ic = IntegerContext.create(ctx, rt.engine)
+        rng = random.Random(0)
+        add, mul = radix_add(bits, msg_bits), radix_mul(bits, msg_bits)
+        jobs = [add, mul, add] * 2 + [add, mul]      # 2:1 mix, 8 requests
+        enc = []
+        for i, w in enumerate(jobs):
+            enc.append(w.encrypt(ic, jax.random.key(1 + i),
+                                 w.sample_values(rng)))
+        # warm: one add + one mul compile every XLA shape on the path
+        for w, e in zip(jobs[:2], enc[:2]):
+            rt.submit(w.build()[0], e, client_id="warm").wait()
+        t0 = time.perf_counter()
+        handles = [rt.submit(w.build()[0], e,
+                             client_id=f"probe-{i % MAX_INFLIGHT}")
+                   for i, (w, e) in enumerate(zip(jobs, enc))]
+        for h in handles:
+            h.wait()
+        rate = len(handles) / (time.perf_counter() - t0)
+    finally:
+        rt.close()
+    return max(0.4, min(4.0, 0.8 * rate))
+
+
+def _row(scenario, real_report: dict, det: bool) -> dict:
+    o = real_report["overall"]
+    return {
+        "bench": "sim", "scenario": scenario.name,
+        "requests": o["requests"], "done": o["done"],
+        "timeout": o["timeout"], "abandoned": o["abandoned"],
+        "failed": o["failed"],
+        "p50_s": o["p50_s"], "p99_s": o["p99_s"],
+        "queue_wait_p99_s": o["queue_wait_p99_s"],
+        "abandon_rate": o["abandon_rate"],
+        "goodput_rps": o["goodput_rps"],
+        "slo_ok": real_report["ok"],
+        "expect_ok": real_report["expect_ok"],
+        "as_expected": real_report["as_expected"],
+        "virtual_deterministic": det,
+        "max_inflight": real_report["max_inflight"],
+    }
+
+
+def run(smoke: bool = False, out_dir: str | None = None) -> list:
+    import jax
+    from repro.core.engine import TaurusEngine
+    from repro.core.params import TEST_PARAMS_4BIT
+    from repro.core.pbs import TFHEContext
+    from repro.sim import (Poisson, Scenario, SLOTargets, WorkloadMix,
+                           run_scenario, simulate_scenario,
+                           standard_suite)
+
+    bits, msg_bits = 8, 2
+    ctx = TFHEContext.create(jax.random.PRNGKey(0), TEST_PARAMS_4BIT)
+    engine = TaurusEngine.from_context(ctx)
+
+    # the seeded-determinism sweep is free (no crypto): always check the
+    # FULL suite virtually, even in smoke mode
+    det_suite = standard_suite(capacity_rps=2.0, duration_s=18.0)
+    det_ok = all(
+        simulate_scenario(sc, max_inflight=MAX_INFLIGHT).report
+        == simulate_scenario(sc, max_inflight=MAX_INFLIGHT).report
+        for sc in det_suite)
+    print(f"[sim_slo] virtual determinism sweep "
+          f"({len(det_suite)} scenarios): "
+          f"{'identical' if det_ok else 'DIVERGED'}")
+
+    cap = _measure_capacity(ctx, engine, bits, msg_bits)
+    print(f"[sim_slo] measured capacity anchor: {cap:.2f} req/s "
+          f"(max_inflight={MAX_INFLIGHT})")
+
+    if smoke:
+        mix = WorkloadMix.of({"analytics_const": 3.0, "radix_add": 1.0},
+                             bits=bits, msg_bits=msg_bits)
+        suite = [Scenario("smoke_steady", Poisson(1.2), mix,
+                          duration_s=5.0, deadline_s=8.0,
+                          slo=SLOTargets(p99_s=8.0, abandon_rate=0.2),
+                          seed=11)]
+    else:
+        suite = standard_suite(capacity_rps=cap, duration_s=12.0)
+
+    rows, reports = [], []
+    for sc in suite:
+        v1 = simulate_scenario(sc, max_inflight=MAX_INFLIGHT)
+        v2 = simulate_scenario(sc, max_inflight=MAX_INFLIGHT)
+        det = det_ok and v1.report == v2.report
+        real = run_scenario(sc, ctx, engine, max_inflight=MAX_INFLIGHT,
+                            validate=True)
+        bad_payload = sum(1 for r in real.records
+                          if r.record.ok_payload is False)
+        if bad_payload:
+            raise AssertionError(
+                f"{sc.name}: {bad_payload} decrypted payloads diverged "
+                f"from the integer oracle")
+        rows.append(_row(sc, real.report, det))
+        reports.append({"scenario": sc.name, "real": real.report,
+                        "virtual": v1.report})
+        o = real.report["overall"]
+        print(f"[sim_slo] {sc.name:13s} req={o['requests']:4d} "
+              f"done={o['done']:4d} abandoned={o['abandoned']:3d} "
+              f"timeout={o['timeout']:3d} "
+              f"p99={0 if o['p99_s'] is None else o['p99_s']:.3f}s "
+              f"goodput={o['goodput_rps']:.2f}rps "
+              f"slo={'PASS' if real.report['ok'] else 'FAIL'} "
+              f"(expected "
+              f"{'PASS' if sc.expect_ok else 'FAIL'})")
+
+    write_report_json(reports,
+                      path=None if out_dir is None else
+                      os.path.join(out_dir, "SIM_SLO_REPORT.json"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny 5-second scenario + the virtual "
+                         "determinism sweep (CI smoke lane)")
+    ap.add_argument("--out-dir", default=None)
+    args = ap.parse_args(argv)
+    rows = run(smoke=args.smoke, out_dir=args.out_dir)
+    path = write_bench_json(
+        rows, path=None if args.out_dir is None else
+        os.path.join(args.out_dir, "BENCH_sim.json"))
+    print(f"[sim_slo] {len(rows)} scenario rows -> {path}")
+    bad = [r["scenario"] for r in rows
+           if not (r["as_expected"] and r["virtual_deterministic"])]
+    if bad:
+        print(f"[sim_slo] FAILED scenarios: {bad}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

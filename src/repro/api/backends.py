@@ -85,6 +85,20 @@ def eval_linear_ct_op(n, vals: dict, p: TFHEParams):
                 % (1 << p.width), U64), delta)
             y = y.at[..., -1].add(b)
         return y
+    if n.op == "radix_addc":
+        # digitize the constant and add each digit onto the matching
+        # digit ciphertext's body — LPU only, result left un-propagated
+        # (its digit ceiling rides on the node's max_val attr)
+        m, d = n.attrs["msg_bits"], n.attrs["n_digits"]
+        c = int(n.attrs["const"]) % (1 << (m * d))
+        digs = np.array([(c >> (i * m)) & ((1 << m) - 1) for i in range(d)],
+                        dtype=np.uint64)
+        x = vals[n.inputs[0]]                      # (V*d, big_n+1)
+        enc = torus.encode(jnp.asarray(np.tile(digs, x.shape[0] // d)),
+                           delta)
+        return x.at[..., -1].add(enc)
+    if n.op == "radix_mulc":
+        return lwe.scalar_mul(vals[n.inputs[0]], int(n.attrs["const"]))
     if n.op in ("reshape", "concat"):
         return vals[n.inputs[0]]
     return None
@@ -103,7 +117,7 @@ def eval_radix_vector(ic: IntegerContext, op: str, spec, av: jax.Array,
     propagation rounds fan out / fuse exactly like the elementwise
     radix ops)."""
     ra = RadixCiphertext(spec, av)
-    if op == "radix_linear":
+    if op in ("radix_linear", "radix_norm"):
         return ic.propagate(ra, max_val=max_val).digits
     if op == "radix_add":
         return ic.add(ra, RadixCiphertext(spec, bv)).digits
@@ -183,6 +197,8 @@ class EagerBackend:
             # LPU-combine + carry-save compress to one vector per output
             # column; the per-vector loop below finishes the propagation
             a, mv = self.int_ctx.linear_compress(a, n.attrs["W"], spec)
+        elif n.op == "radix_norm":
+            mv = n.attrs["max_val"]
         elif len(n.inputs) == 2:
             b = vals[n.inputs[1]].reshape(-1, d, width)
         outs = [eval_radix_vector(self.int_ctx, n.op, spec, a[v],

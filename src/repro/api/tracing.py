@@ -136,48 +136,126 @@ class EncryptedInt:
     boolean comparisons, whose verdict-to-bit LUT is a 2^width table;
     `Session.trace` always supplies it, the session-free
     `trace_program(..., params=None)` path leaves it unset.
+
+    Plaintext-constant operands (`enc + 3`, `enc * 2`, `enc - 5`) record
+    LPU-only `radix_addc`/`radix_mulc` nodes — no PBS round.  The result
+    is left UN-PROPAGATED: `max_val` tracks its per-digit plaintext
+    ceiling (decryption recombines exactly regardless), and a
+    `radix_norm` node (one carry propagation) is auto-inserted only when
+    an un-normalized value feeds a PBS op whose digit packing assumes
+    values below base.
     """
 
     def __init__(self, t: FheTensor, spec: IntSpec,
-                 width: Optional[int] = None):
+                 width: Optional[int] = None,
+                 max_val: Optional[int] = None):
         assert spec.msg_bits is not None, "IntSpec must be resolved"
         assert tuple(t.shape) == spec.tensor_shape, (t.shape, spec)
         self.t = t
         self.spec = spec
         self.width = width
+        # per-digit plaintext ceiling; base-1 == carry-propagated
+        self.max_val = ((1 << spec.msg_bits) - 1
+                        if max_val is None else int(max_val))
 
     @property
     def shape(self):
         return self.spec.shape
 
+    @property
+    def _window(self) -> int:
+        """Largest per-digit plaintext value the parameter set can hold.
+        Without a session (width unknown) assume the standard
+        width = 2*msg_bits layout — conservative: a wider real window
+        only makes the extra norms sound, never wrong."""
+        w = self.width if self.width is not None else 2 * self.spec.msg_bits
+        return (1 << w) - 1
+
+    def norm(self) -> "EncryptedInt":
+        """Carry-propagate back below base (PBS rounds); no-op when the
+        digits are already normalized."""
+        base = 1 << self.spec.msg_bits
+        if self.max_val <= base - 1:
+            return self
+        return EncryptedInt(
+            self.t.radix_norm(self.spec.msg_bits, self.max_val),
+            self.spec, self.width)
+
     # -- arithmetic (each one radix node over the digit axis) ---------------
     def _coerce(self, other) -> "EncryptedInt":
         if not isinstance(other, EncryptedInt):
             raise TypeError(
-                f"EncryptedInt ops need EncryptedInt operands, got "
-                f"{type(other).__name__} (encrypt plaintext constants as "
-                f"program inputs)")
+                f"EncryptedInt ops need EncryptedInt or int operands, got "
+                f"{type(other).__name__} (encrypt non-integer plaintext "
+                f"as program inputs)")
         assert other.spec == self.spec, (self.spec, other.spec)
         return other
 
+    def _addc(self, const: int) -> "EncryptedInt":
+        c = int(const) % self.spec.modulus
+        if c == 0:
+            return self
+        m = self.spec.msg_bits
+        base = 1 << m
+        cmax = max((c >> (i * m)) & (base - 1)
+                   for i in range(self.spec.n_digits))
+        s = self if self.max_val + cmax <= self._window else self.norm()
+        out_max = s.max_val + cmax
+        return EncryptedInt(s.t.radix_addc(c, m, out_max),
+                            self.spec, self.width, max_val=out_max)
+
+    def _mulc(self, const: int) -> "EncryptedInt":
+        k = int(const)
+        if k < 0:
+            raise TypeError(
+                "negative plaintext multipliers are not supported "
+                "(digitwise scaling has no base complement) — encrypt "
+                "the constant as a program input")
+        if k == 1:
+            return self
+        base = 1 << self.spec.msg_bits
+        s = self if k * self.max_val <= self._window else self.norm()
+        if k * s.max_val > self._window:
+            raise TypeError(
+                f"plaintext multiplier {k} overflows the digit window "
+                f"(ceiling {k * s.max_val} > {self._window}) — encrypt "
+                f"it as a program input and use ct*ct multiply")
+        out_max = k * s.max_val
+        return EncryptedInt(s.t.radix_mulc(k, self.spec.msg_bits, out_max),
+                            self.spec, self.width, max_val=out_max)
+
     def __add__(self, other):
+        if isinstance(other, (int, np.integer)):
+            return self._addc(other)
         o = self._coerce(other)
-        return EncryptedInt(self.t.radix_add(o.t, self.spec.msg_bits),
+        a, b = self.norm(), o.norm()
+        return EncryptedInt(a.t.radix_add(b.t, self.spec.msg_bits),
                             self.spec, self.width)
 
+    __radd__ = __add__
+
     def __sub__(self, other):
+        if isinstance(other, (int, np.integer)):
+            return self._addc(-int(other))
         o = self._coerce(other)
-        return EncryptedInt(self.t.radix_sub(o.t, self.spec.msg_bits),
+        a, b = self.norm(), o.norm()
+        return EncryptedInt(a.t.radix_sub(b.t, self.spec.msg_bits),
                             self.spec, self.width)
 
     def __mul__(self, other):
+        if isinstance(other, (int, np.integer)):
+            return self._mulc(other)
         o = self._coerce(other)
-        return EncryptedInt(self.t.radix_mul(o.t, self.spec.msg_bits),
+        a, b = self.norm(), o.norm()
+        return EncryptedInt(a.t.radix_mul(b.t, self.spec.msg_bits),
                             self.spec, self.width)
+
+    __rmul__ = __mul__
 
     def relu(self) -> "EncryptedInt":
         """Two's-complement max(x, 0)."""
-        return EncryptedInt(self.t.radix_relu(self.spec.msg_bits),
+        s = self.norm()
+        return EncryptedInt(s.t.radix_relu(self.spec.msg_bits),
                             self.spec, self.width)
 
     def linear(self, W) -> "EncryptedInt":
@@ -197,14 +275,16 @@ class EncryptedInt:
                 f"linear needs a 1-D vector of encrypted integers "
                 f"(IntSpec shape (V,)), got shape {self.spec.shape}")
         out_spec = dataclasses.replace(self.spec, shape=(int(W.shape[1]),))
-        return EncryptedInt(self.t.radix_linear(W, self.spec.msg_bits),
+        s = self.norm()
+        return EncryptedInt(s.t.radix_linear(W, self.spec.msg_bits),
                             out_spec, self.width)
 
     # -- comparisons ---------------------------------------------------------
     def cmp(self, other) -> EncryptedValue:
         """Three-way compare: 0 equal / 1 less / 2 greater per integer."""
         o = self._coerce(other)
-        return EncryptedValue(self.t.radix_cmp(o.t, self.spec.msg_bits))
+        a, b = self.norm(), o.norm()
+        return EncryptedValue(a.t.radix_cmp(b.t, self.spec.msg_bits))
 
     def _cmp_bit(self, other, which: str) -> EncryptedValue:
         if self.width is None:

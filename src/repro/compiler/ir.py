@@ -39,8 +39,18 @@ LINEAR_OPS = ("add", "sub", "addc", "mulc", "linear", "concat", "reshape")
 # + per-output carry propagation).  Unlike the elementwise ops its round
 # count depends on the weight matrix, so the node carries `term_maxes`
 # (per-term digit ceilings of its worst output column) for the plan.
+#
+# `radix_addc` / `radix_mulc` are the LPU-ONLY plaintext-constant ops
+# (no PBS round at all): they leave the result UN-PROPAGATED, with the
+# per-digit plaintext ceiling tracked as the node's `max_val` attr —
+# `RadixSpec.from_digits` decrypts such values exactly, so a program
+# ending in const ops never bootstraps for them.  `radix_norm` is the
+# explicit renormalization (`IntegerContext.propagate(max_val=...)`)
+# the tracer inserts when an un-propagated value feeds a PBS op whose
+# digit packing assumes values below base.
 RADIX_OPS = ("radix_add", "radix_sub", "radix_mul", "radix_relu",
-             "radix_cmp", "radix_linear")
+             "radix_cmp", "radix_linear", "radix_addc", "radix_mulc",
+             "radix_norm")
 
 
 def _ceil_log2(n: int) -> int:
@@ -49,7 +59,8 @@ def _ceil_log2(n: int) -> int:
 
 def radix_round_plan(op: str, n_digits: int, msg_bits: Optional[int] = None,
                      width: Optional[int] = None,
-                     term_maxes: Optional[tuple] = None) -> list:
+                     term_maxes: Optional[tuple] = None,
+                     max_val: Optional[int] = None) -> list:
     """Batched-PBS rounds of one radix op over a D-digit vector,
     mirroring the carry strategy `IntegerContext.propagate` auto-selects.
     Each round is a dict:
@@ -119,6 +130,23 @@ def radix_round_plan(op: str, n_digits: int, msg_bits: Optional[int] = None,
         # ripple: D batched (msg, carry) extraction rounds
         return ripple_plan(d)
 
+    if op in ("radix_addc", "radix_mulc"):
+        return []                         # LPU-only: no PBS round at all
+    if op == "radix_norm":
+        # mirrors `IntegerContext.propagate(max_val=...)`: batched
+        # (msg, carry) pre-extraction rounds fold the digit ceiling down
+        # to 2*base-2, then the add-style carry scan finishes
+        m = msg_bits if msg_bits is not None else 2
+        w_eff = width if width is not None else 2 * m
+        base = 1 << m
+        mv = max_val if max_val is not None else (1 << w_eff) - 1
+        rounds = []
+        while mv > 2 * base - 2:
+            mv = (base - 1) + (mv >> m)
+            rounds.append({"luts": 2 * d, "sources": d,
+                           "tables": ("radix/msg", "radix/carry"),
+                           "macs": d})
+        return rounds + add_plan()
     if op in ("radix_add", "radix_sub"):
         return add_plan()
     if op == "radix_linear":
@@ -251,7 +279,8 @@ class Graph:
                     r["luts"]
                     for r in radix_round_plan(
                         n.op, n.attrs["n_digits"], n.attrs.get("msg_bits"),
-                        term_maxes=n.attrs.get("term_maxes")))
+                        term_maxes=n.attrs.get("term_maxes"),
+                        max_val=n.attrs.get("max_val")))
         return total
 
 
@@ -369,6 +398,34 @@ class FheTensor:
         n = self.graph.add("radix_linear", (self.node.id,),
                            (W.shape[1], d), W=W, msg_bits=msg_bits,
                            n_digits=d, term_maxes=tuple(cols))
+        return FheTensor(self.graph, n)
+
+    def radix_addc(self, const: int, msg_bits: int,
+                   max_val: int) -> "FheTensor":
+        """Add a plaintext constant digitwise — LPU only, NO carry
+        propagation: the result's per-digit ceiling is `max_val`
+        (recorded on the node; `from_digits` still decrypts exactly)."""
+        n = self.graph.add("radix_addc", (self.node.id,), self.shape,
+                           const=int(const), msg_bits=msg_bits,
+                           n_digits=self.shape[-1], max_val=int(max_val))
+        return FheTensor(self.graph, n)
+
+    def radix_mulc(self, const: int, msg_bits: int,
+                   max_val: int) -> "FheTensor":
+        """Multiply by a non-negative plaintext integer digitwise — LPU
+        only, NO carry propagation (`max_val` = resulting digit ceiling)."""
+        n = self.graph.add("radix_mulc", (self.node.id,), self.shape,
+                           const=int(const), msg_bits=msg_bits,
+                           n_digits=self.shape[-1], max_val=int(max_val))
+        return FheTensor(self.graph, n)
+
+    def radix_norm(self, msg_bits: int, max_val: int) -> "FheTensor":
+        """Carry-propagate an un-normalized digit vector back below base
+        (`max_val` = the INPUT's digit ceiling, what the runtime's
+        `propagate(max_val=...)` receives)."""
+        n = self.graph.add("radix_norm", (self.node.id,), self.shape,
+                           msg_bits=msg_bits, n_digits=self.shape[-1],
+                           max_val=int(max_val))
         return FheTensor(self.graph, n)
 
     def radix_cmp(self, other, msg_bits: int):

@@ -61,7 +61,8 @@ def _levels(g: Graph) -> dict:
     for n in g.nodes:
         depth = (len(radix_round_plan(n.op, n.attrs["n_digits"],
                                       n.attrs.get("msg_bits"),
-                                      term_maxes=n.attrs.get("term_maxes")))
+                                      term_maxes=n.attrs.get("term_maxes"),
+                                      max_val=n.attrs.get("max_val")))
                  if n.op in RADIX_OPS else 1)
         lvl[n.id] = depth + max((lvl[i] for i in n.inputs), default=-1)
     return lvl
@@ -136,6 +137,10 @@ def lower_to_physical(g: Graph, *, ks_dedup: bool = True,
             ops.append(PhysOp("BR", n.id, n.n_elements, lvl[n.id],
                               table_id=tid))
             ops.append(PhysOp("SE", n.id, n.n_elements, lvl[n.id]))
+        elif n.op in ("radix_addc", "radix_mulc"):
+            # LPU-only const ops: one MAC per digit, zero PBS rounds
+            ops.append(PhysOp("LIN", n.id, n.n_elements, lvl[n.id],
+                              macs=n.n_elements))
         elif n.op in RADIX_OPS:
             # one KS/BR/SE wave per batched round (see ir.radix_round_plan).
             # Within a round the (msg, carry)-style LUT fanout reads the
@@ -145,7 +150,8 @@ def lower_to_physical(g: Graph, *, ks_dedup: bool = True,
             vecs = radix_vectors(n)
             plan = radix_round_plan(n.op, n.attrs["n_digits"],
                                     n.attrs.get("msg_bits"),
-                                    term_maxes=n.attrs.get("term_maxes"))
+                                    term_maxes=n.attrs.get("term_maxes"),
+                                    max_val=n.attrs.get("max_val"))
             base_lvl = lvl[n.id] - len(plan) + 1
             if n.op == "radix_linear":
                 # the LPU weight combine that precedes the rounds: one

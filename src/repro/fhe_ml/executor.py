@@ -54,6 +54,12 @@ def _interpret_radix(n, vals: dict) -> np.ndarray:
                          for v in res for i in range(d)], np.int64)
     if n.op == "radix_add":
         res = [(x + y) % mod for x, y in zip(ints_a, ints_b)]
+    elif n.op == "radix_addc":
+        res = [(x + int(n.attrs["const"])) % mod for x in ints_a]
+    elif n.op == "radix_mulc":
+        res = [(x * int(n.attrs["const"])) % mod for x in ints_a]
+    elif n.op == "radix_norm":
+        res = ints_a                    # value-preserving renormalization
     elif n.op == "radix_sub":
         res = [(x - y) % mod for x, y in zip(ints_a, ints_b)]
     elif n.op == "radix_mul":

@@ -42,7 +42,8 @@ from __future__ import annotations
 from repro.obs.bandwidth import (NULL_LEDGER, BandwidthLedger, NullLedger,
                                  engine_key_bytes)
 from repro.obs.metrics import (NULL_REGISTRY, Counter, Gauge, Histogram,
-                               MetricsRegistry, NullRegistry, StatsView)
+                               MetricsRegistry, NullRegistry, Snapshot,
+                               StatsView)
 from repro.obs.trace import (NOOP_RECORDER, NoopRecorder, SpanEvent,
                              TraceRecorder, validate_chrome_trace)
 
@@ -98,9 +99,10 @@ class Telemetry:
     def histogram(self, name: str, max_samples: int = 4096) -> Histogram:
         return self.registry.histogram(name, max_samples)
 
-    def snapshot(self) -> dict:
+    def snapshot(self) -> Snapshot:
         """The single structured view: registry instruments plus the
-        bandwidth ledger."""
+        bandwidth ledger.  A `Snapshot`, so two phase-boundary calls
+        diff into a windowed delta: ``later.diff(earlier)``."""
         snap = self.registry.snapshot()
         snap["bandwidth"] = self.bandwidth.snapshot()
         return snap
@@ -109,6 +111,7 @@ class Telemetry:
 __all__ = [
     "BandwidthLedger", "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "NOOP_RECORDER", "NULL_LEDGER", "NULL_REGISTRY", "NoopRecorder",
-    "NullLedger", "NullRegistry", "SpanEvent", "StatsView", "Telemetry",
+    "NullLedger", "NullRegistry", "Snapshot", "SpanEvent", "StatsView",
+    "Telemetry",
     "TraceRecorder", "engine_key_bytes", "validate_chrome_trace",
 ]

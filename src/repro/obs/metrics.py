@@ -117,6 +117,17 @@ class Histogram:
         idx = min(len(s) - 1, max(0, int(q * len(s))))
         return s[idx]
 
+    def sample_state(self) -> Optional[tuple]:
+        """(count, samples-in-observation-order) while the sketch is
+        still exact (count <= max_samples), else None.  `Snapshot.diff`
+        slices two exact states into interval quantiles; once the
+        reservoir engages, sample order no longer matches observation
+        order and interval quantiles are unsupported."""
+        with self._lock:
+            if self.count > self._cap:
+                return None
+            return self.count, tuple(self._samples)
+
     @property
     def mean(self) -> Optional[float]:
         return self.total / self.count if self.count else None
@@ -135,6 +146,84 @@ class Histogram:
 
     def __repr__(self) -> str:
         return f"Histogram({self.name}, n={self.count})"
+
+
+def _interval_summary(later_state: Optional[tuple],
+                      earlier_count: int) -> Optional[dict]:
+    """Summary of the observations made BETWEEN two exact sample states.
+
+    Histograms are append-only until the reservoir engages, so the
+    interval's observations are precisely `later_samples[earlier_count:]`
+    — exact interval quantiles, not a subtraction heuristic.  Returns
+    None when the later sketch is no longer exact (reservoir engaged)."""
+    if later_state is None:
+        return None
+    _, samples = later_state
+    window = list(samples[earlier_count:])
+    if not window:
+        return {"count": 0, "sum": 0.0, "mean": None, "min": None,
+                "max": None, "p50": None, "p95": None, "p99": None}
+    window.sort()
+    n = len(window)
+
+    def q(p: float) -> float:
+        return window[min(n - 1, max(0, int(p * n)))]
+
+    total = sum(window)
+    return {"count": n, "sum": total, "mean": total / n,
+            "min": window[0], "max": window[-1],
+            "p50": q(0.50), "p95": q(0.95), "p99": q(0.99)}
+
+
+class Snapshot(dict):
+    """`MetricsRegistry.snapshot()`'s return type: a plain dict (JSON-
+    serializable, existing ``snap["histograms"][...]["p99"]`` consumers
+    unaffected) that additionally supports windowed deltas via `diff`.
+
+    `diff(earlier)` is what per-phase SLO evaluation needs: counters
+    subtract, gauges pass through the later sample, histograms report
+    the INTERVAL's quantiles where supported (both snapshots taken
+    while the sketch was exact; otherwise count/sum/mean still subtract
+    but quantiles are None), and a ``bandwidth`` key — attached by
+    `Telemetry.snapshot` — subtracts numeric leaves."""
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        # hist name -> (count, samples) while exact; not a dict item so
+        # json.dump and == against plain dicts behave unchanged
+        self.raw_samples: dict = {}
+
+    def diff(self, earlier: "Snapshot") -> "Snapshot":
+        out = Snapshot()
+        e_counters = earlier.get("counters", {})
+        out["counters"] = {n: v - e_counters.get(n, 0)
+                           for n, v in self.get("counters", {}).items()}
+        # gauges are point-in-time samples; the later value IS the
+        # window's reading (subtracting queue depths is meaningless)
+        out["gauges"] = dict(self.get("gauges", {}))
+        hists = {}
+        e_hists = earlier.get("histograms", {})
+        for name, s in self.get("histograms", {}).items():
+            e = e_hists.get(name, {"count": 0, "sum": 0.0})
+            interval = _interval_summary(self.raw_samples.get(name),
+                                         e.get("count", 0))
+            if interval is None:
+                # reservoir engaged: exact totals, no interval quantiles
+                n = s["count"] - e.get("count", 0)
+                total = s["sum"] - e.get("sum", 0.0)
+                interval = {"count": n, "sum": total,
+                            "mean": total / n if n else None,
+                            "min": None, "max": None,
+                            "p50": None, "p95": None, "p99": None}
+            hists[name] = interval
+        out["histograms"] = hists
+        if "bandwidth" in self:
+            e_bw = earlier.get("bandwidth", {})
+            out["bandwidth"] = {
+                k: (v - e_bw.get(k, 0)
+                    if isinstance(v, (int, float)) else v)
+                for k, v in self["bandwidth"].items()}
+        return out
 
 
 class MetricsRegistry:
@@ -169,18 +258,22 @@ class MetricsRegistry:
                 h = self._histograms[name] = Histogram(name, max_samples)
             return h
 
-    def snapshot(self) -> dict:
+    def snapshot(self) -> Snapshot:
         """One structured view of every instrument: counters as ints,
-        gauges as floats, histograms as p50/p95/p99 summaries."""
+        gauges as floats, histograms as p50/p95/p99 summaries.  The
+        returned `Snapshot` supports `.diff(earlier)` for windowed
+        per-phase deltas."""
         with self._lock:
             counters = dict(self._counters)
             gauges = dict(self._gauges)
             hists = dict(self._histograms)
-        return {
+        snap = Snapshot({
             "counters": {n: c.value for n, c in sorted(counters.items())},
             "gauges": {n: g.value for n, g in sorted(gauges.items())},
             "histograms": {n: h.summary() for n, h in sorted(hists.items())},
-        }
+        })
+        snap.raw_samples = {n: h.sample_state() for n, h in hists.items()}
+        return snap
 
 
 # ---------------------------------------------------------------------------
@@ -242,8 +335,8 @@ class NullRegistry:
     def histogram(self, name: str, max_samples: int = 4096) -> _NullHistogram:
         return _NULL_HISTOGRAM
 
-    def snapshot(self) -> dict:
-        return {"counters": {}, "gauges": {}, "histograms": {}}
+    def snapshot(self) -> Snapshot:
+        return Snapshot({"counters": {}, "gauges": {}, "histograms": {}})
 
 
 NULL_REGISTRY = NullRegistry()

@@ -49,14 +49,16 @@ from repro.serve.programs import (decrypt_radix_output,
                                   encrypt_request_inputs,
                                   fhe_ml_block_program,
                                   radix_binop_program, radix_unop_program)
-from repro.serve.runtime import (AdmissionError, OutputFuture, RequestHandle,
+from repro.serve.runtime import (AdmissionError, OutputFuture,
+                                 RequestAbandonedError, RequestHandle,
                                  RuntimeClosedError, ServeRequest,
                                  ServeRuntime, SubmitValidationError)
 from repro.serve.scheduler import FusedEngineProxy, FusedLutScheduler
 
 __all__ = [
     "AdmissionError", "FusedEngineProxy", "FusedLutScheduler",
-    "IrInterpreter", "OutputFuture", "RequestHandle", "RuntimeClosedError",
+    "IrInterpreter", "OutputFuture", "RequestAbandonedError",
+    "RequestHandle", "RuntimeClosedError",
     "ServeRequest", "ServeRuntime", "SubmitValidationError",
     "decrypt_radix_output", "encrypt_request_inputs",
     "fhe_ml_block_program", "radix_binop_program", "radix_unop_program",

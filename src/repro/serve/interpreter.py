@@ -158,6 +158,8 @@ class IrInterpreter:
             # fuse with other in-flight requests through the proxy); only
             # the final per-vector propagation fans out below
             a, mv = ic.linear_compress(a, n.attrs["W"], spec)
+        elif n.op == "radix_norm":
+            mv = n.attrs["max_val"]
         elif len(n.inputs) == 2:
             b = vals[n.inputs[1]].reshape(-1, d, width)
         sched = getattr(self.engine, "_scheduler", None)

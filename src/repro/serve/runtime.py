@@ -47,7 +47,16 @@ class SubmitValidationError(ValueError):
 
 
 class RuntimeClosedError(RuntimeError):
-    """submit() after close() — the runtime no longer admits work."""
+    """submit() after close() — the runtime no longer admits work.  Also
+    the terminal error of requests still queued when `close(drain=False)`
+    shuts the runtime down: their waiters unblock immediately instead of
+    hanging on a handle nobody will ever execute."""
+
+
+class RequestAbandonedError(RuntimeError):
+    """The request was canceled while still queued (`ServeRuntime.cancel`
+    / `RequestHandle.abandon`) — e.g. a client's deadline expired before
+    admission.  Waiters see this instead of blocking forever."""
 
 
 @dataclasses.dataclass
@@ -137,6 +146,7 @@ class RequestHandle:
         self.submitted_at: Optional[float] = None   # perf_counter stamps
         self.admitted_at: Optional[float] = None
         self.completed_at: Optional[float] = None
+        self._runtime = None                        # set by submit()
         self._done = threading.Event()
         self.output_futures = [
             OutputFuture(nid, i)
@@ -162,6 +172,16 @@ class RequestHandle:
         """Graph outputs of the finished request, in order."""
         vals = self.wait()
         return [vals[i] for i in self.request.graph.outputs]
+
+    def abandon(self) -> bool:
+        """Cancel this request if it is still queued (deadline expired,
+        client gave up).  True if it was removed before admission — the
+        handle then terminates with `RequestAbandonedError`.  False if
+        already executing or done: an in-flight request cannot be
+        stopped mid-round, so the caller decides whether to keep
+        waiting."""
+        rt = self._runtime
+        return rt.cancel(self) if rt is not None else False
 
 
 class ServeRuntime:
@@ -236,7 +256,8 @@ class ServeRuntime:
         tel = self.telemetry
         self._c = {k: tel.counter(f"serve.{k}")
                    for k in ("admitted", "completed", "failed",
-                             "retries", "rejected", "invalid")}
+                             "retries", "rejected", "invalid",
+                             "abandoned")}
         self._h_latency = tel.histogram("serve.request_latency_s")
         self._h_queue_wait = tel.histogram("serve.queue_wait_s")
         self._h_queue_depth = tel.histogram("serve.queue_depth")
@@ -307,6 +328,7 @@ class ServeRuntime:
             req = ServeRequest(client_id, graph, enc_inputs, self._next_id)
             self._next_id += 1
             handle = RequestHandle(req)
+            handle._runtime = self
             handle.submitted_at = time.perf_counter()
             q.append(handle)
             if client_id not in self._client_ring:
@@ -345,15 +367,73 @@ class ServeRuntime:
             for t in list(self._threads):
                 t.join(timeout=0.05)
 
-    def close(self) -> None:
-        self.drain()
+    def cancel(self, handle: RequestHandle) -> bool:
+        """Remove a still-queued request; True if it was canceled.
+
+        A canceled handle terminates immediately with
+        `RequestAbandonedError` (its waiters and output futures all
+        unblock).  Returns False when the request was already admitted
+        or finished — an executing request cannot be stopped mid-round."""
+        req = handle.request
+        with self._lock:
+            q = self._queues.get(req.client_id)
+            if q is None or handle not in q:
+                return False
+            q.remove(handle)
+            if not q:
+                del self._queues[req.client_id]
+                ring = self._client_ring
+                ring.remove(req.client_id)
+                self._rr = self._rr % len(ring) if ring else 0
+            self._c["abandoned"].inc()
+            self._g_queue_depth.set(
+                sum(len(qq) for qq in self._queues.values()))
+        self._fail_handle(handle, RequestAbandonedError(
+            f"request {req.request_id} (client {req.client_id!r}) "
+            f"canceled while queued"))
+        self.telemetry.instant("abandoned", cat="serve",
+                               request=req.request_id, client=req.client_id)
+        return True
+
+    @staticmethod
+    def _fail_handle(handle: RequestHandle, err: BaseException) -> None:
+        handle.error = err
+        handle.completed_at = time.perf_counter()
+        for f in handle.output_futures:
+            f.fail(err)
+        handle._done.set()
+
+    def close(self, drain: bool = True) -> None:
+        """Shut the runtime down.
+
+        drain=True (default) first waits for every queued/in-flight
+        request to finish.  drain=False fails fast: requests still
+        QUEUED terminate immediately with `RuntimeClosedError` (no
+        waiter hangs on work that will never run); requests already
+        executing run to completion (a PBS round can't be stopped
+        mid-flight) and their handles resolve normally."""
+        if drain:
+            self.drain()
         with self._lock:
             self._closed = True
-        for t in self._threads:
+            dropped = [h for q in self._queues.values() for h in q]
+            self._queues.clear()
+            self._client_ring.clear()
+            self._rr = 0
+            if dropped:
+                self._c["abandoned"].inc(len(dropped))
+            self._g_queue_depth.set(0)
+        for h in dropped:
+            self._fail_handle(h, RuntimeClosedError(
+                f"request {h.request.request_id} was still queued when the "
+                f"runtime closed"))
+        for t in list(self._threads):
             t.join()
 
     # -- admission (round-robin across clients) ------------------------------
     def _admit_locked(self) -> None:
+        if self._closed:
+            return
         while not self._paused and self._inflight < self.max_inflight:
             handle = self._next_handle_locked()
             if handle is None:

@@ -145,8 +145,12 @@ def test_comparisons_need_width():
 
 
 def test_mixed_operand_type_rejected():
+    # ints are fine (LPU-only const ops); anything else still needs to
+    # be encrypted as a program input
     with pytest.raises(TypeError, match="EncryptedInt"):
-        trace_program(lambda a: a + 3, (IntSpec(BITS, 2),))
+        trace_program(lambda a: a + 1.5, (IntSpec(BITS, 2),))
+    with pytest.raises(TypeError, match="EncryptedInt"):
+        trace_program(lambda a: a * "3", (IntSpec(BITS, 2),))
 
 
 def test_fhe_executor_is_a_deprecation_shim(ctx_2bit):
@@ -199,3 +203,70 @@ def test_oracle_radix_semantics():
     out = interpret(prog.graph, [digits((-5) % MOD)], 4)
     assert sum(int(v) << (i * m)
                for i, v in enumerate(out[prog.graph.outputs[0]])) == 0
+
+
+# --- plaintext-constant operands (LPU-only radix_addc / radix_mulc) ----------
+
+def test_const_ops_trace_lpu_only():
+    """`x*k + c` lowers to radix_mulc/radix_addc — zero PBS in the whole
+    plan — with auto-norm only when the digit window demands it."""
+    spec = IntSpec(BITS, 2)
+    prog = trace_program(lambda x: x * 3 + 41, (spec,))
+    ops = [n.op for n in prog.graph.nodes]
+    assert "radix_mulc" in ops and "radix_addc" in ops
+    assert "radix_add" not in ops and "radix_mul" not in ops
+    assert prog.graph.lut_applications() == 0
+    # identity constants fold away entirely
+    prog_id = trace_program(lambda x: (x + 0) * 1, (spec,))
+    assert [n.op for n in prog_id.graph.nodes] == ["input"]
+
+
+def test_const_ops_auto_norm_on_window_overflow():
+    """Chaining const ops past the carry window inserts radix_norm (a
+    PBS round) automatically instead of overflowing digits."""
+    spec = IntSpec(BITS, 2)
+    prog = trace_program(lambda x: (x * 3 + 3) * 3, (spec,))
+    ops = [n.op for n in prog.graph.nodes]
+    assert "radix_norm" in ops
+    assert prog.graph.lut_applications() > 0   # the norm round only
+
+
+def test_const_mul_rejects_negative_and_overflow():
+    spec = IntSpec(BITS, 2)
+    with pytest.raises(TypeError, match="negative"):
+        trace_program(lambda x: x * -2, (spec,))
+    with pytest.raises(TypeError, match="overflows the digit window"):
+        trace_program(lambda x: x * 1000, (spec,))
+
+
+@pytest.mark.parametrize("backend", ["eager", "local", "serve"])
+def test_const_ops_identical_on_all_backends(ctx_4bit, engine_4bit,
+                                             backend):
+    """radix_addc/mulc/norm execute identically on every backend and
+    match integer semantics mod 2^bits, including __radd__/__rmul__ and
+    const subtraction (complement add)."""
+    with Session(ctx_4bit, engine_4bit, backend=backend) as sess:
+        prog = sess.trace(lambda x: (3 * x + 200, 7 + x, x - 9),
+                          IntSpec(BITS))
+        v = 173
+        got = sess(prog, jax.random.key(5), v)
+    assert got[0] == (3 * v + 200) % MOD
+    assert got[1] == (7 + v) % MOD
+    assert got[2] == (v - 9) % MOD
+
+
+def test_const_ops_oracle_semantics():
+    """interpret() covers the const ops too: keyless checking of the
+    same programs the backends run."""
+    m, d = 2, 4
+    spec = IntSpec(BITS, m)
+
+    def digits(v):
+        return np.array([(v >> (i * m)) & 3 for i in range(d)], np.int64)
+
+    prog = trace_program(lambda x: (x * 3 + 41) - 5, (spec,))
+    for v in (0, 9, 200, 255):
+        out = interpret(prog.graph, [digits(v)], 4)
+        got = sum(int(x) << (i * m)
+                  for i, x in enumerate(out[prog.graph.outputs[0]]))
+        assert got == (v * 3 + 41 - 5) % MOD, v

@@ -433,3 +433,82 @@ def test_bench_dry_run_real_modules_pass():
     exporter) stays green — this is what the CI smoke lane executes."""
     from benchmarks.run import main
     assert main(["--dry-run", "--only", "serve,fhe_ml"]) == 0
+
+
+# --- Snapshot.diff (PR 8 satellite: phase-windowed metric deltas) -----------
+
+def test_snapshot_diff_counters_gauges_and_exact_interval_quantiles():
+    reg = MetricsRegistry()
+    c = reg.counter("serve.completed")
+    g = reg.gauge("serve.queue_depth")
+    h = reg.histogram("serve.request_latency_s")
+    c.inc(3)
+    g.set(5)
+    for v in (10.0, 20.0):
+        h.observe(v)
+    earlier = reg.snapshot()
+    c.inc(4)
+    g.set(2)
+    for v in (30.0, 40.0, 50.0, 60.0):
+        h.observe(v)
+    later = reg.snapshot()
+    delta = later.diff(earlier)
+    # counters subtract, gauges report the later value
+    assert delta["counters"]["serve.completed"] == 4
+    assert delta["gauges"]["serve.queue_depth"] == 2
+    # the histogram window covers ONLY the interval's samples, exactly
+    hd = delta["histograms"]["serve.request_latency_s"]
+    assert hd["count"] == 4 and hd["sum"] == 180.0 and hd["mean"] == 45.0
+    assert hd["min"] == 30.0 and hd["max"] == 60.0
+    assert hd["p50"] == 50.0 and hd["p99"] == 60.0
+    # instruments created after `earlier` diff against zero
+    reg.counter("serve.abandoned").inc(2)
+    delta2 = reg.snapshot().diff(earlier)
+    assert delta2["counters"]["serve.abandoned"] == 2
+    # an empty interval has count 0 and None quantiles
+    empty = reg.snapshot().diff(reg.snapshot())
+    hd0 = empty["histograms"]["serve.request_latency_s"]
+    assert hd0["count"] == 0 and hd0["p50"] is None
+    # diffs are JSON-clean (what BENCH_sim.json consumers see)
+    json.dumps(delta)
+
+
+def test_snapshot_diff_reservoir_fallback_keeps_exact_counts():
+    """Past the sample cap the interval quantiles are no longer exact —
+    diff() must degrade to exact count/sum/mean with None quantiles
+    rather than report wrong tails."""
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", 64)
+    for v in range(10):
+        h.observe(float(v))
+    earlier = reg.snapshot()
+    for v in range(100):                      # blows past the cap of 64
+        h.observe(float(v))
+    delta = reg.snapshot().diff(earlier)
+    hd = delta["histograms"]["lat"]
+    assert hd["count"] == 100
+    assert hd["sum"] == float(sum(range(100)))
+    assert hd["p50"] is None and hd["p99"] is None
+
+
+def test_snapshot_diff_bandwidth_and_telemetry_roundtrip():
+    tel = Telemetry()
+    tel.counter("serve.admitted").inc(2)
+    tel.bandwidth.account_round(participants=2, rows_logical=4,
+                                rows_dispatched=3, rows_padded=1,
+                                bsk_bytes=1000, ksk_bytes=100)
+    earlier = tel.snapshot()
+    tel.counter("serve.admitted").inc(5)
+    tel.bandwidth.account_round(participants=3, rows_logical=6,
+                                rows_dispatched=5, rows_padded=0,
+                                bsk_bytes=1000, ksk_bytes=100)
+    delta = tel.snapshot().diff(earlier)
+    assert delta["counters"]["serve.admitted"] == 5
+    # bandwidth ledger totals subtract like counters: only the second
+    # round's traffic shows in the window
+    assert delta["bandwidth"]["fused_rounds"] == 1
+    assert delta["bandwidth"]["participants"] == 3
+    assert delta["bandwidth"]["rows_dispatched"] == 5
+    assert delta["bandwidth"]["bsk_bytes_streamed"] == 1000
+    assert delta["bandwidth"]["bsk_bytes_unfused"] == 3000
+    json.dumps(delta)

@@ -288,3 +288,68 @@ def test_intra_request_vector_fanout_fuses(ctx_4bit, engine_4bit, ic4):
     assert on["logical_luts"] == off["logical_luts"]
     assert on["fused_rounds"] * 3 == off["fused_rounds"]
     assert rt_on.scheduler.mean_occupancy == pytest.approx(1.0)
+
+
+# --- abandon / fail-fast shutdown (PR 8 satellites) --------------------------
+
+def test_cancel_queued_request_abandons(ctx_2bit, engine_2bit):
+    """RequestHandle.abandon() removes a still-queued request: waiters
+    unblock with RequestAbandonedError, the abandoned counter moves,
+    and other clients' requests are untouched."""
+    from repro.serve import RequestAbandonedError
+    rt = ServeRuntime(ctx_2bit, engine_2bit, fused=False, start_paused=True)
+    g = _linear_graph(1)
+    x = ctx_2bit.encrypt(jax.random.key(50), np.array([1]))
+    h_a = rt.submit(g, [x], client_id="A")
+    h_b = rt.submit(g, [x], client_id="B")
+    assert h_a.abandon() is True
+    assert h_a.abandon() is False            # already terminal
+    with pytest.raises(RequestAbandonedError):
+        h_a.wait(timeout=1)
+    with pytest.raises(RequestAbandonedError):
+        h_a.output_futures[0].wait(timeout=1)
+    assert rt.stats["abandoned"] == 1
+    rt.resume()
+    rt.drain()
+    assert int(ctx_2bit.decrypt(h_b.outputs()[0][0])) == 2
+    assert rt.stats["completed"] == 1
+    # a finished handle cannot be abandoned
+    assert h_b.abandon() is False
+    rt.close()
+
+
+def test_close_drain_false_fails_queued_fast(ctx_2bit, engine_2bit):
+    """close(drain=False) is fail-fast: queued requests terminate with
+    RuntimeClosedError IMMEDIATELY (no waiter hangs on work that will
+    never run) instead of the old hang-forever behavior."""
+    import time as _time
+
+    from repro.serve import RuntimeClosedError
+    rt = ServeRuntime(ctx_2bit, engine_2bit, fused=False, start_paused=True)
+    g = _linear_graph(3)
+    x = ctx_2bit.encrypt(jax.random.key(51), np.array([1]))
+    handles = [rt.submit(g, [x], client_id=f"c{i}") for i in range(3)]
+    t0 = _time.perf_counter()
+    rt.close(drain=False)
+    for h in handles:
+        with pytest.raises(RuntimeClosedError, match="still queued"):
+            h.wait(timeout=5)
+        assert h.done()
+    assert _time.perf_counter() - t0 < 2.0   # fail-fast, not a hang
+    assert rt.stats["abandoned"] == 3 and rt.stats["completed"] == 0
+    with pytest.raises(RuntimeClosedError):
+        rt.submit(g, [x], client_id="late")
+
+
+def test_close_drain_false_lets_inflight_finish(ctx_2bit, engine_2bit):
+    """Requests already EXECUTING at close(drain=False) run to
+    completion (a PBS round cannot be stopped mid-flight) and their
+    handles resolve normally."""
+    rt = ServeRuntime(ctx_2bit, engine_2bit, fused=False, max_inflight=1)
+    g = _linear_graph(1)
+    x = ctx_2bit.encrypt(jax.random.key(52), np.array([2]))
+    h = rt.submit(g, [x], client_id="A")
+    h.wait(timeout=30)                       # admitted + done
+    rt.close(drain=False)
+    assert int(ctx_2bit.decrypt(h.outputs()[0][0])) == 3
+    assert rt.stats["completed"] == 1 and rt.stats["abandoned"] == 0

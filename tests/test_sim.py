@@ -1,0 +1,248 @@
+"""repro.sim: seeded arrival processes, the client state machine, the
+deterministic virtual-time runner (same scenario + seed ⇒ identical
+report, field for field), and a real-ciphertext smoke scenario through
+`run_scenario`.
+
+The virtual-runner tests use synthetic workloads (no crypto — the
+simulator never builds or encrypts anything), so forcing every
+life-cycle outcome (DONE / TIMEOUT / ABANDONED, drain and fail-fast
+cutoffs) is cheap.  The real smoke scenario runs PBS-free const-op
+programs on the session key material, keeping it in the smoke lane.
+"""
+import json
+import random
+
+import pytest
+
+from repro.sim import (ABANDONED, DONE, FAILED, SUBMIT, TIMEOUT, WAITING,
+                       ClientRequest, ClosedLoop, MMPP, Phase, Poisson,
+                       Scenario, SLOTargets, Workload, WorkloadMix,
+                       arrival_plan, outcome_counts, run_scenario,
+                       simulate_scenario)
+
+
+def _synthetic(name: str, service_s: float) -> Workload:
+    """A workload the virtual runner can use without any crypto."""
+    return Workload(name, builder=lambda: (None, (), ()),
+                    sample=lambda rng: [], mean_service_s=service_s)
+
+
+def _scenario(service_s: float, *, rate: float = 2.0, duration: float = 10.0,
+              deadline: float = 5.0, drain: bool = True, seed: int = 0,
+              phases: tuple = (), arrival=None) -> Scenario:
+    mix = WorkloadMix([(_synthetic("syn", service_s), 1.0)])
+    return Scenario("t", arrival or Poisson(rate), mix, duration,
+                    deadline_s=deadline, drain=drain, seed=seed,
+                    phases=phases, slo=SLOTargets(abandon_rate=0.99))
+
+
+# --- arrivals ---------------------------------------------------------------
+
+def test_poisson_schedule_seeded_and_rate_sane():
+    a = Poisson(3.0).schedule(50.0, seed=4)
+    b = Poisson(3.0).schedule(50.0, seed=4)
+    c = Poisson(3.0).schedule(50.0, seed=5)
+    assert a == b and a != c
+    assert all(0 <= t < 50.0 for t in a) and a == sorted(a)
+    assert 50 < len(a) < 300                 # ~150 expected
+
+def test_mmpp_burst_segment_denser_than_calm():
+    proc = MMPP(((0.5, 20.0), (8.0, 20.0)))
+    times = proc.schedule(40.0, seed=9)
+    assert times == proc.schedule(40.0, seed=9)
+    calm = sum(1 for t in times if t < 20.0)
+    burst = sum(1 for t in times if t >= 20.0)
+    assert burst > 4 * max(calm, 1)
+
+def test_arrival_plan_round_robins_population():
+    plan = arrival_plan(Poisson(5.0), population=3, duration_s=10.0, seed=1)
+    assert [c for _, c in plan[:6]] == [0, 1, 2, 0, 1, 2]
+    with pytest.raises(AssertionError):
+        arrival_plan(ClosedLoop(1.0), 2, 10.0, 0)
+
+
+# --- client state machine ---------------------------------------------------
+
+def test_state_machine_valid_paths_and_rejections():
+    r = ClientRequest("c", "w", 0.0, 5.0)
+    r.transition(SUBMIT)
+    r.transition(WAITING)
+    r.transition(DONE, at_s=1.25)
+    assert r.finish_s == 1.25 and r.latency_s == 1.25
+    # terminal states accept nothing further
+    with pytest.raises(ValueError):
+        r.transition(SUBMIT)
+    # no skipping straight to WAITING, no WAITING -> SUBMIT
+    with pytest.raises(ValueError):
+        ClientRequest("c", "w", 0.0, 5.0).transition(WAITING)
+    r2 = ClientRequest("c", "w", 0.0, 5.0)
+    r2.transition(SUBMIT)
+    with pytest.raises(ValueError):
+        r2.transition(SUBMIT)
+    # every documented edge out of SUBMIT and WAITING
+    for tail in (FAILED, ABANDONED, WAITING):
+        rr = ClientRequest("c", "w", 0.0, 5.0)
+        rr.transition(SUBMIT)
+        rr.transition(tail, at_s=2.0)
+    for tail in (DONE, TIMEOUT, ABANDONED, FAILED):
+        rr = ClientRequest("c", "w", 0.0, 5.0)
+        rr.transition(SUBMIT)
+        rr.transition(WAITING)
+        rr.transition(tail, at_s=2.0)
+
+def test_outcome_counts_tallies_terminals_only():
+    recs = []
+    for tail in (DONE, DONE, TIMEOUT, ABANDONED, FAILED):
+        r = ClientRequest("c", "w", 0.0, 1.0)
+        r.transition(SUBMIT)
+        r.transition(WAITING)
+        r.transition(tail, at_s=0.5)
+        recs.append(r)
+    open_req = ClientRequest("c", "w", 0.0, 1.0)
+    open_req.transition(SUBMIT)
+    counts = outcome_counts(recs + [open_req])
+    assert counts == {DONE: 2, TIMEOUT: 1, ABANDONED: 1, FAILED: 1,
+                      "attempts": 5}
+
+
+# --- workload mix -----------------------------------------------------------
+
+def test_workload_mix_weighted_and_seeded():
+    a, b = _synthetic("a", 1.0), _synthetic("b", 1.0)
+    mix = WorkloadMix([(a, 3.0), (b, 1.0)])
+    draws = [mix.sample(random.Random(7)).name for _ in range(5)]
+    assert len(set(draws)) == 1              # same seed, same draw
+    rng = random.Random(7)
+    names = [mix.sample(rng).name for _ in range(400)]
+    assert 0.6 < names.count("a") / 400 < 0.9
+    with pytest.raises(ValueError):
+        WorkloadMix([])
+
+
+# --- deterministic virtual runner -------------------------------------------
+
+def test_simulate_identical_reports_field_for_field():
+    third = 4.0
+    sc = _scenario(0.8, rate=3.0, duration=12.0, deadline=4.0, seed=21,
+                   arrival=MMPP(((1.0, third), (6.0, third), (1.0, third))),
+                   phases=(Phase("calm", third), Phase("burst", third),
+                           Phase("recover", third)))
+    r1 = simulate_scenario(sc, max_inflight=2)
+    r2 = simulate_scenario(sc, max_inflight=2)
+    assert r1.report == r2.report
+    # field-for-field through JSON too (what BENCH_sim.json consumers see)
+    assert json.dumps(r1.report, sort_keys=True) == \
+        json.dumps(r2.report, sort_keys=True)
+    # a different seed is different traffic
+    sc2 = _scenario(0.8, rate=3.0, duration=12.0, deadline=4.0, seed=22,
+                    arrival=sc.arrival, phases=sc.phases)
+    assert simulate_scenario(sc2, max_inflight=2).report != r1.report
+    # per-phase attribution covers every terminal record
+    phases = r1.report["phases"]
+    assert [p["phase"] for p in phases] == ["calm", "burst", "recover"]
+    assert sum(p["requests"] for p in phases) == \
+        r1.report["overall"]["requests"]
+
+def test_simulate_outcomes_done_timeout_abandoned():
+    # ample capacity + generous deadline: everything DONE
+    run = simulate_scenario(_scenario(0.2, deadline=5.0), max_inflight=8)
+    states = {r.record.state for r in run.records}
+    assert states == {DONE}
+    assert run.report["overall"]["abandon_rate"] == 0.0
+    # service longer than the deadline but a free slot: started, finishes
+    # late -> TIMEOUT (abandon() would have refused)
+    run = simulate_scenario(_scenario(3.0, rate=0.2, deadline=1.0),
+                            max_inflight=8)
+    assert {r.record.state for r in run.records} == {TIMEOUT}
+    # one slot + slow service: the queue outlives the deadline -> ABANDONED
+    run = simulate_scenario(_scenario(4.0, rate=3.0, deadline=2.0),
+                            max_inflight=1)
+    states = {r.record.state for r in run.records}
+    assert ABANDONED in states and DONE in states or TIMEOUT in states
+    assert run.report["overall"]["abandoned"] > 0
+
+def test_simulate_fail_fast_cutoff_abandons_queue():
+    # drain=False: whatever is still queued at the cutoff is dropped
+    # (the runtime's close(drain=False) path), started work completes
+    sc = _scenario(2.0, rate=4.0, duration=6.0, deadline=50.0, drain=False)
+    run = simulate_scenario(sc, max_inflight=1)
+    counts = outcome_counts([r.record for r in run.records])
+    assert counts[ABANDONED] > 0 and counts[DONE] > 0
+    assert all(r.record.state in (DONE, TIMEOUT, ABANDONED)
+               for r in run.records)
+    # abandons at the cutoff are stamped at the scenario end
+    cut = [r.record for r in run.records if r.record.state == ABANDONED]
+    assert all(abs(r.finish_s - 6.0) < 1e-9 or r.finish_s <= 6.0
+               for r in cut)
+
+def test_simulate_closed_loop_bounded_by_population():
+    sc = _scenario(1.0, duration=20.0, deadline=10.0,
+                   arrival=ClosedLoop(think_s=0.5))
+    sc = Scenario(sc.name, sc.arrival, sc.mix, sc.duration_s,
+                  population=2, deadline_s=sc.deadline_s, slo=sc.slo,
+                  seed=3)
+    run = simulate_scenario(sc, max_inflight=8)
+    assert run.report == simulate_scenario(sc, max_inflight=8).report
+    assert {r.record.state for r in run.records} == {DONE}
+    # 2 clients, ~1.5s per cycle, 20s: roughly 2*20/1.5 requests; an
+    # open loop at the same nominal rate would be unbounded by service
+    assert 10 <= len(run.records) <= 40
+    # never more in flight than the population: queue wait stays ~0
+    assert run.report["overall"]["queue_wait_p99_s"] < 1e-9
+
+def test_slo_checks_and_verdicts():
+    sc = _scenario(0.2, deadline=5.0)
+    sc = Scenario(sc.name, sc.arrival, sc.mix, sc.duration_s,
+                  deadline_s=sc.deadline_s, seed=1,
+                  slo=SLOTargets(p99_s=2.0, abandon_rate=0.05,
+                                 goodput_rps=0.5))
+    rep = simulate_scenario(sc, max_inflight=8).report
+    assert rep["ok"] and rep["as_expected"]
+    assert {c["metric"] for c in rep["overall"]["checks"]} == \
+        {"p99_s", "abandon_rate", "goodput_rps"}
+    # an impossible goodput floor flips the verdict
+    sc_bad = Scenario(sc.name, sc.arrival, sc.mix, sc.duration_s,
+                      deadline_s=sc.deadline_s, seed=1,
+                      slo=SLOTargets(goodput_rps=1e9))
+    rep_bad = simulate_scenario(sc_bad, max_inflight=8).report
+    assert not rep_bad["ok"] and not rep_bad["as_expected"]
+
+def test_scenario_phase_duration_mismatch_rejected():
+    mix = WorkloadMix([(_synthetic("syn", 1.0), 1.0)])
+    with pytest.raises(ValueError):
+        Scenario("bad", Poisson(1.0), mix, duration_s=10.0,
+                 phases=(Phase("a", 3.0), Phase("b", 3.0)))
+
+
+# --- the real runner on real ciphertexts (smoke lane) -----------------------
+
+def test_run_scenario_real_ciphertexts_smoke(ctx_2bit, engine_2bit):
+    """A 1.5-second PBS-free scenario through a real ServeRuntime:
+    every payload decrypts to the oracle value and the report carries
+    measured latency quantiles."""
+    from repro.api.session import trace_program
+    from repro.api.tracing import IntSpec
+
+    bits, msg = 4, 1
+    mod = 1 << bits
+
+    def builder():
+        prog = trace_program(lambda x: x * 2 + 1, (IntSpec(bits, msg),))
+        return prog.graph, prog.in_specs, prog.out_specs
+
+    w = Workload("const4", builder,
+                 sample=lambda rng: [rng.randrange(mod)],
+                 oracle=lambda v: [(2 * v[0] + 1) % mod],
+                 mean_service_s=0.01)
+    sc = Scenario("real_smoke", Poisson(4.0), WorkloadMix([(w, 1.0)]),
+                  duration_s=1.5, deadline_s=6.0, population=2,
+                  slo=SLOTargets(abandon_rate=0.0, goodput_rps=0.5),
+                  seed=5)
+    run = run_scenario(sc, ctx_2bit, engine_2bit, max_inflight=2,
+                       validate=True)
+    assert run.report["runner"] == "real"
+    o = run.report["overall"]
+    assert o["requests"] >= 2 and o["done"] == o["requests"]
+    assert o["p50_s"] is not None and o["p99_s"] is not None
+    assert all(r.record.ok_payload for r in run.records)
+    assert run.report["ok"] and run.report["as_expected"]
