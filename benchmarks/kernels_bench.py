@@ -1,0 +1,161 @@
+"""Pallas engine-room benchmark: per-kernel and fused `lut_batch` wall
+clock, reference-vs-pallas speedup, and bytes streamed vs the
+`launch/roofline.py` per-round bandwidth bound.
+
+Writes benchmarks/BENCH_kernels.json (merged by workload, like
+BENCH_serve.json) so the kernel perf trajectory is tracked across PRs.
+
+NB: this container runs the Pallas kernels in INTERPRET mode on CPU, so
+the measured "speedup" is a correctness-weighted proxy, not TPU perf —
+the roofline gate (`bytes_ok`) is the hardware-relevant number: the
+fused path's streamed bytes must sit within the key-reuse bound or the
+residency story (and the paper's 2600x ride on it) is broken.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+# every BENCH_kernels.json row carries these (run.py --dry-run pins them)
+BENCH_COLUMNS = ("workload", "params", "B", "ref_ms", "pallas_ms",
+                 "speedup", "bytes_streamed", "bytes_bound", "bytes_ok",
+                 "reuse_factor", "t_memory_bound_s")
+
+
+def _bench(fn, *args, reps=3):
+    fn(*args).block_until_ready()          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    r.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def write_bench_json(rows: list, path: str | None = None) -> str:
+    """Merge kernel rows into benchmarks/BENCH_kernels.json by workload
+    (re-running one workload must not clobber the others' rows)."""
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "BENCH_kernels.json")
+    rows = [r for r in rows if r.get("bench") == "kernels"]
+    existing = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f)
+        except (OSError, ValueError):
+            existing = []
+    fresh = {r.get("workload") for r in rows}
+    keep = [r for r in existing if r.get("workload") not in fresh]
+    with open(path, "w") as f:
+        json.dump(keep + rows, f, indent=1, default=float)
+    return path
+
+
+def run() -> list:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import batch as batch_mod, glwe
+    from repro.core.engine import TaurusEngine
+    from repro.core.params import TEST_PARAMS
+    from repro.core.pbs import TFHEContext
+    from repro.kernels import external_product, fourstep_fft, keyswitch, ref
+    from repro.launch.roofline import pbs_round_model
+
+    out = []
+    params = TEST_PARAMS
+    ctx = TFHEContext.create(jax.random.PRNGKey(0), params)
+
+    # -- per-kernel wall clock vs the reference oracle ----------------------
+    print("\n== Pallas kernels (interpret mode) vs reference oracles ==")
+    print(f"{'kernel':18s} {'ref_ms':>8s} {'pallas_ms':>10s} {'speedup':>8s}")
+    key = jax.random.PRNGKey(7)
+    B, N = 8, params.N
+    x = jax.random.randint(key, (B, N), 0, 1 << 30, dtype=jnp.int64
+                           ).astype(jnp.float64)
+    per_kernel = [
+        ("fft_forward",
+         lambda v: jnp.asarray(ref.fft_forward_ref(v)),
+         lambda v: fourstep_fft.fft_forward(v, dtype=jnp.float64), (x,)),
+        ("fft_inverse",
+         lambda s: jnp.asarray(ref.fft_inverse_ref(s)),
+         lambda s: fourstep_fft.fft_inverse(s, dtype=jnp.float64),
+         (fourstep_fft.fft_forward(x, dtype=jnp.float64),)),
+    ]
+    J, K, M = (params.k + 1) * params.pbs_level, params.k + 1, N // 2
+    dig = jax.random.normal(key, (B, 2, J, M), dtype=jnp.float64)
+    bsk1 = jax.random.normal(jax.random.fold_in(key, 1), (2, J, K, M),
+                             dtype=jnp.float64)
+    per_kernel.append((
+        "external_product",
+        lambda d, w: jnp.asarray(ref.external_product_mac_ref(d, w)),
+        lambda d, w: external_product.external_product_mac(
+            d, w, block_f=min(2048, M), dtype=jnp.float64), (dig, bsk1)))
+    S, T = params.big_n * params.ks_level, params.n + 1
+    digs = jax.random.randint(key, (B, S), -16, 16, dtype=jnp.int32)
+    ksk_flat = ctx.ksk.reshape(S, T)
+    khi, klo = ref.split_u64(ksk_flat)
+    per_kernel.append((
+        "keyswitch_mac",
+        lambda d: ref.keyswitch_mac_ref(d, ksk_flat),
+        lambda d: ref.merge_u64(*keyswitch.keyswitch_mac(d, khi, klo)),
+        (digs,)))
+
+    for name, ref_fn, pal_fn, args in per_kernel:
+        t_ref = _bench(ref_fn, *args)
+        t_pal = _bench(pal_fn, *args)
+        print(f"{name:18s} {t_ref * 1e3:8.2f} {t_pal * 1e3:10.2f} "
+              f"{t_ref / t_pal:8.2f}")
+        out.append({"bench": "kernels", "workload": f"kernel_{name}",
+                    "params": params.name, "B": B,
+                    "ref_ms": t_ref * 1e3, "pallas_ms": t_pal * 1e3,
+                    "speedup": t_ref / t_pal, "bytes_streamed": None,
+                    "bytes_bound": None, "bytes_ok": True,
+                    "reuse_factor": None, "t_memory_bound_s": None})
+
+    # -- end-to-end fused lut_batch: reference vs pallas engine -------------
+    print("\n== Fused lut_batch: reference vs pallas engine room ==")
+    print(f"{'B':>3s} {'ref_ms':>8s} {'pallas_ms':>10s} {'speedup':>8s} "
+          f"{'bytes_frac':>10s} {'reuse':>6s}")
+    eng_ref = TaurusEngine.from_context(ctx)
+    eng_pal = TaurusEngine.from_context(ctx, kernel_backend="pallas")
+    table = jnp.arange(params.plaintext_modulus, dtype=jnp.uint64)
+    poly = glwe.make_lut_poly(table, params)
+    for B in (4, 12):
+        k2 = jax.random.PRNGKey(1)
+        msgs = np.arange(B) % params.plaintext_modulus
+        cts = jnp.stack([ctx.encrypt(jax.random.fold_in(k2, i), m)
+                         for i, m in enumerate(msgs)])
+        polys = jnp.broadcast_to(poly, (B, params.N))
+        t_ref = _bench(eng_ref.lut_batch, cts, polys)
+        t_pal = _bench(eng_pal.lut_batch, cts, polys)
+        # decrypt-parity gate: a fast wrong kernel must not post a row
+        d_ref = [int(ctx.decrypt(v)) for v in eng_ref.lut_batch(cts, polys)]
+        d_pal = [int(ctx.decrypt(v)) for v in eng_pal.lut_batch(cts, polys)]
+        assert d_ref == d_pal, f"decrypt mismatch: {d_ref} vs {d_pal}"
+
+        model = pbs_round_model(params, B)
+        streamed = eng_pal.fused_pack.bytes_streamed_per_round(B)
+        bytes_ok = streamed <= model.fused_bytes
+        assert bytes_ok, (f"fused path streams {streamed} B/round, over the "
+                          f"roofline bound {model.fused_bytes}")
+        print(f"{B:3d} {t_ref * 1e3:8.1f} {t_pal * 1e3:10.1f} "
+              f"{t_ref / t_pal:8.2f} {streamed / model.fused_bytes:10.3f} "
+              f"{model.reuse_factor:6.1f}")
+        out.append({"bench": "kernels", "workload": f"lut_batch_B{B}",
+                    "params": params.name, "B": B,
+                    "ref_ms": t_ref * 1e3, "pallas_ms": t_pal * 1e3,
+                    "speedup": t_ref / t_pal,
+                    "bytes_streamed": streamed,
+                    "bytes_bound": model.fused_bytes,
+                    "bytes_ok": bytes_ok,
+                    "reuse_factor": model.reuse_factor,
+                    "t_memory_bound_s": model.t_memory})
+    return out
+
+
+if __name__ == "__main__":
+    rows = run()
+    path = write_bench_json(rows)
+    print(f"[kernels_bench] {len(rows)} rows -> {path}")

@@ -24,7 +24,7 @@ import sys
 import traceback
 
 ALL = ["fig5", "table2", "table4", "fig13", "fig15", "dedup", "engine",
-       "radix", "serve", "fhe_ml", "sim"]
+       "kernels", "radix", "serve", "fhe_ml", "sim"]
 
 # the observability columns every serve-bench row gained in the
 # repro.obs PR; the dry run fails if a serve benchmark stops declaring
@@ -37,16 +37,22 @@ SERVE_BENCH_NAMES = ("serve", "fhe_ml")
 SIM_SLO_COLUMNS = ("p50_s", "p99_s", "queue_wait_p99_s", "abandon_rate",
                    "goodput_rps", "slo_ok", "virtual_deterministic")
 
+# the columns every kernel row must carry (BENCH_kernels.json consumers
+# key on these; the Pallas engine-room PR's dry-run contract)
+KERNEL_COLUMNS = ("ref_ms", "pallas_ms", "speedup", "bytes_streamed",
+                  "bytes_bound", "bytes_ok", "reuse_factor")
+
 
 def _default_mods() -> dict:
     from benchmarks import (fig5_addition, table2_workloads, table4_xpu,
                             fig13_bandwidth, fig15_utilization, dedup_stats,
-                            engine_wallclock, fhe_ml_serve, radix_throughput,
-                            serve_throughput, sim_slo)
+                            engine_wallclock, fhe_ml_serve, kernels_bench,
+                            radix_throughput, serve_throughput, sim_slo)
     return {"fig5": fig5_addition, "table2": table2_workloads,
             "table4": table4_xpu, "fig13": fig13_bandwidth,
             "fig15": fig15_utilization, "dedup": dedup_stats,
-            "engine": engine_wallclock, "radix": radix_throughput,
+            "engine": engine_wallclock, "kernels": kernels_bench,
+            "radix": radix_throughput,
             "serve": serve_throughput, "fhe_ml": fhe_ml_serve,
             "sim": sim_slo}
 
@@ -68,6 +74,19 @@ def _dry_run_checks(mods: dict, which: list) -> list:
         missing = [c for c in SIM_SLO_COLUMNS if c not in cols]
         if missing:
             bad.append(f"sim: BENCH_COLUMNS missing {missing}")
+    if "kernels" in which:
+        cols = tuple(getattr(mods["kernels"], "BENCH_COLUMNS", ()))
+        missing = [c for c in KERNEL_COLUMNS if c not in cols]
+        if missing:
+            bad.append(f"kernels: BENCH_COLUMNS missing {missing}")
+        # the roofline model the kernel rows are gated by must build
+        try:
+            from repro.core.params import TEST_PARAMS
+            from repro.launch.roofline import pbs_round_model
+            model = pbs_round_model(TEST_PARAMS, 12)
+            assert model.fused_bytes < model.unfused_bytes
+        except Exception as err:  # noqa: BLE001 — any breakage fails the check
+            bad.append(f"kernels roofline model: {err!r}")
     # the trace exporter the CI smoke lane relies on must round-trip
     try:
         from repro.obs import Telemetry, validate_chrome_trace
@@ -130,6 +149,11 @@ def main(argv=None, mods: dict | None = None):
         spath = write_sim_json(
             results, path=os.path.join(out_dir, "BENCH_sim.json"))
         print(f"[benchmarks] sim SLO rows -> {spath}")
+    if any(r.get("bench") == "kernels" for r in results):
+        from benchmarks.kernels_bench import write_bench_json as write_k_json
+        spath = write_k_json(
+            results, path=os.path.join(out_dir, "BENCH_kernels.json"))
+        print(f"[benchmarks] kernel rows -> {spath}")
     print(f"\n[benchmarks] {len(results)} rows -> {path}; "
           f"{len(failed)} failed {failed}")
     # a partial run keeps its rows but must exit non-zero: CI treats any

@@ -315,12 +315,14 @@ _BACKENDS = {"eager": EagerBackend, "local": LocalBackend,
              "serve": ServeBackend}
 
 
-def make_backend(name: str, ctx, engine=None, **kw):
+def make_backend(name: str, ctx, engine=None, *, kernel_backend=None, **kw):
     """Construct a named backend ("eager" | "local" | "serve") over the
     given key material; extra keywords forward to the backend's
     constructor (e.g. `fused=True` for local, `max_inflight=8` for
-    serve).  `Session` calls this for string backends; use it directly
-    to share one backend across sessions::
+    serve).  `kernel_backend="reference" | "pallas"` selects the engine
+    room when no prebuilt engine is passed (see `repro.core.engine`).
+    `Session` calls this for string backends; use it directly to share
+    one backend across sessions::
 
         be = make_backend("serve", ctx, engine, max_inflight=4)
         sess = Session(ctx, engine, backend=be)
@@ -330,4 +332,10 @@ def make_backend(name: str, ctx, engine=None, **kw):
     except KeyError:
         raise ValueError(f"unknown backend {name!r} "
                          f"(have {sorted(_BACKENDS)})") from None
+    if kernel_backend is not None:
+        if engine is not None:
+            raise TypeError("pass kernel_backend OR a prebuilt engine, "
+                            "not both")
+        from repro.core.engine import TaurusEngine
+        engine = TaurusEngine.from_context(ctx, kernel_backend=kernel_backend)
     return cls(ctx, engine, **kw)

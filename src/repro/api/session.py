@@ -92,6 +92,11 @@ class Session:
     constructor (e.g. `max_inflight=8` for "serve", `fused=True` for
     "local").
 
+    kernel_backend: "reference" | "pallas" — which PBS engine room the
+    session's `TaurusEngine` runs (see `repro.core.engine`).  Only valid
+    when no prebuilt engine is passed; eager, local, and serve backends
+    all inherit it because they share the session engine.
+
     telemetry: an optional `repro.obs.Telemetry` threaded through the
     named backend's whole stack (runtime, scheduler, interpreter,
     integer context); `Session.metrics()` returns its snapshot and,
@@ -113,10 +118,17 @@ class Session:
     """
 
     def __init__(self, ctx, engine=None, backend="local", telemetry=None,
-                 **backend_kw):
+                 kernel_backend=None, **backend_kw):
         from repro.api.backends import make_backend
+        from repro.core.engine import TaurusEngine
         self.ctx = ctx
         self.params = ctx.params
+        if kernel_backend is not None:
+            if engine is not None:
+                raise TypeError("pass kernel_backend OR a prebuilt engine, "
+                                "not both (set it on the engine instead)")
+            engine = TaurusEngine.from_context(ctx,
+                                               kernel_backend=kernel_backend)
         # client-side radix crypto (encrypt/decrypt only — backends own
         # their server-side contexts)
         self.int_ctx = IntegerContext.create(ctx, engine)

@@ -9,6 +9,15 @@ Mapping (paper -> here):
 
 The engine is the execution backend for `repro.compiler` schedules and
 the unit benchmarks in `benchmarks/`.
+
+Kernel backends: `kernel_backend="reference"` (default) runs the jax
+reference PBS in `repro.core.batch`; `"pallas"` runs the fused Pallas
+engine room (`repro.kernels.fused_pbs`) — same KS-first pipeline, but
+the FFT / external-product / keyswitch stages execute as Pallas kernels
+against a `FusedPbsPack` of resident transform-domain key operands
+(built lazily on first `lut_batch`, reused across every round — the
+paper's key-reuse strategy).  Both backends are decrypt-identical; the
+keyswitch stage is bit-identical.
 """
 from __future__ import annotations
 
@@ -59,6 +68,20 @@ class TaurusEngine:
     # Set explicitly (engine.telemetry = tel) — the serve layer does NOT
     # auto-attach, so a shared engine never pollutes baseline waves.
     telemetry: Optional[object] = None
+    # "reference" = jax PBS in repro.core.batch; "pallas" = fused kernel
+    # path in repro.kernels.fused_pbs (interpret mode on CPU).
+    kernel_backend: str = "reference"
+
+    def __post_init__(self):
+        if self.kernel_backend not in ("reference", "pallas"):
+            raise ValueError(
+                f"kernel_backend must be 'reference' or 'pallas', "
+                f"got {self.kernel_backend!r}")
+        if self.kernel_backend == "pallas" and self.mesh is not None:
+            raise NotImplementedError(
+                "kernel_backend='pallas' does not support mesh sharding "
+                "yet — the fused kernels run per-device; use the "
+                "reference backend for multi-cluster meshes")
 
     # -- derived -----------------------------------------------------------
     @property
@@ -71,6 +94,18 @@ class TaurusEngine:
                 int(self.bsk_f.size) * self.bsk_f.dtype.itemsize,
                 int(self.ksk.size) * self.ksk.dtype.itemsize)
         return kb
+
+    @property
+    def fused_pack(self):
+        """The resident `FusedPbsPack` for the pallas backend, built on
+        first use and cached — every later `lut_batch` round reuses the
+        same transform-domain key arrays (the paper's key reuse)."""
+        pack = getattr(self, "_fused_pack", None)
+        if pack is None:
+            from repro.kernels.fused_pbs import FusedPbsPack
+            pack = self._fused_pack = FusedPbsPack.build(
+                self.bsk_f, self.ksk, self.params)
+        return pack
 
     @property
     def n_clusters(self) -> int:
@@ -124,7 +159,10 @@ class TaurusEngine:
             span.__enter__()
         try:
             if self.mesh is None:
-                out = batch_mod.pbs_batch(cts, lut_polys, self.bsk_f, self.ksk, self.params)
+                if self.kernel_backend == "pallas":
+                    out = self.fused_pack.pbs_batch(cts, lut_polys)
+                else:
+                    out = batch_mod.pbs_batch(cts, lut_polys, self.bsk_f, self.ksk, self.params)
             else:
                 data_sh = NamedSharding(self.mesh, P(self.data_axis))
                 repl = NamedSharding(self.mesh, P())
@@ -139,6 +177,7 @@ class TaurusEngine:
             if span is not None:
                 span.__exit__(None, None, None)
         if tel is not None:
+            tel.counter(f"engine.lut_batches_{self.kernel_backend}").inc()
             tel.counter("engine.lut_batches").inc()
             tel.counter("engine.pbs_rows").inc(B + pad)
             tel.counter("engine.pbs_rows_padded").inc(pad)

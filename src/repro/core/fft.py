@@ -11,9 +11,12 @@ that trick, in pure JAX:
     pointwise multiply in the transform domain == negacyclic convolution
     inverse :  untwist + split real/imag.
 
-`repro.kernels.fourstep_fft` re-implements the FFT itself as the paper's
+`repro.kernels.fourstep_fft` implements the FFT itself as the paper's
 heterogeneous 256x128 factorization (MXU matmuls); this module is the
-reference path and is what the CPU engine runs.
+complex128 reference path — the kernel oracle AND what
+`TaurusEngine(kernel_backend="reference")` (the default) runs.  With
+`kernel_backend="pallas"` the engine's PBS hot path runs the Pallas
+kernel instead, with f64 planes (`repro.kernels.fused_pbs`).
 """
 from __future__ import annotations
 

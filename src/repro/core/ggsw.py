@@ -4,8 +4,12 @@ A GGSW ciphertext of a bit s is a ((k+1)*level, k+1, N) stack of GLWE
 rows:  row (u, l) = GLWE_sk(0) + s * g_l * e_u   (Z + s*G).
 
 The external product  GGSW ⊡ GLWE -> GLWE  (paper Fig. 4b) is a
-vector-matrix product over polynomials in the transform domain; its
-Pallas incarnation is `repro.kernels.external_product`.
+vector-matrix product over polynomials in the transform domain.  Its
+Pallas incarnation, `repro.kernels.external_product`, runs inside the
+engine's fused PBS path (`TaurusEngine(kernel_backend="pallas")` ->
+`repro.kernels.fused_pbs`) against a resident plane-layout BSK built
+once from `bsk_to_fourier`'s output; this module is the reference path
+and the differential-test oracle.
 """
 from __future__ import annotations
 

@@ -3,9 +3,12 @@
 Ciphertext layout: (..., n+1) uint64 = [a_0 .. a_{n-1}, b].
 All functions are batched over leading axes.
 
-Key-switching here is the paper's most expensive LPU op; the Pallas
-version lives in `repro.kernels.keyswitch` and is verified against this
-module.
+Key-switching here is the paper's most expensive LPU op.  The Pallas
+uint32-limb version in `repro.kernels.keyswitch` is wired into the PBS
+hot path via `TaurusEngine(kernel_backend="pallas")`
+(`repro.kernels.fused_pbs.keyswitch_fused`) and is BIT-IDENTICAL to
+`keyswitch` below — the limb MAC is exact mod 2^64, pinned by
+`tests/test_kernels.py`.
 """
 from __future__ import annotations
 

@@ -7,6 +7,9 @@ n) right before blind rotation.  This order is what enables the
 compiler's KS-dedup (Observation 6).
 
 `TFHEContext` bundles keygen + client ops; `pbs()` is the server op.
+The batched variant lives in `repro.core.batch` (reference) and
+`repro.kernels.fused_pbs` (Pallas engine room) — `TaurusEngine`
+selects between them via `kernel_backend`.
 """
 from __future__ import annotations
 

@@ -6,7 +6,11 @@
                       (batched) BSK reuse.
   keyswitch         — the LPU key-switch MAC; 64-bit torus arithmetic
                       synthesized from uint32 limbs (TPU has no u64).
+  fused_pbs         — the three kernels fused into the batched PBS hot
+                      path with resident transform-domain keys; this is
+                      what `TaurusEngine(kernel_backend="pallas")` runs.
 
 Each kernel ships jit wrappers in `ops.py` and a pure-jnp oracle in
-`ref.py`; tests sweep shapes/dtypes in interpret mode.
+`ref.py`; tests sweep shapes/dtypes in interpret mode and grade the
+fused path differentially against the reference engine.
 """

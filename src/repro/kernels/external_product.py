@@ -11,9 +11,13 @@ once per grid step and consumed by every ciphertext in the batch —
 arithmetic intensity on the BSK stream scales with B, which is exactly
 why Taurus round-robins 12 ciphertexts per core.
 
-Layouts (stacked re/im f32 planes):
+Layouts (stacked re/im planes, f32 or f64 via `dtype`):
     dig: (B, 2, J, F)     bsk: (2, J, K, F)     out: (B, 2, K, F)
-The grid tiles F (VMEM-sized chunks, multiples of 128 lanes).
+The grid tiles F (VMEM-sized chunks, multiples of 128 lanes).  The
+fused PBS engine (`repro.kernels.fused_pbs`) keeps the BSK operand
+RESIDENT in this transform-domain plane layout across every round of a
+fused batch — the decomposition + transform is paid once per key, not
+once per round.
 """
 from __future__ import annotations
 
@@ -36,17 +40,24 @@ def _kernel(dig_ref, bsk_ref, o_ref):
     o_ref[:, 1] = outi
 
 
-@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret", "dtype"))
 def external_product_mac(dig: jax.Array, bsk: jax.Array, *,
-                         block_f: int = 2048, interpret: bool = True) -> jax.Array:
-    """dig (B,2,J,F) f32, bsk (2,J,K,F) f32 -> (B,2,K,F) f32."""
+                         block_f: int = 2048, interpret: bool = True,
+                         dtype=jnp.float32) -> jax.Array:
+    """dig (B,2,J,F), bsk (2,J,K,F) -> (B,2,K,F), stacked re/im planes.
+
+    `dtype` selects the plane precision: f32 is the TPU-native mode; the
+    fused engine path runs f64 planes (interpret mode) so the MAC error
+    stays far below the scheme's noise budget on 64-bit torus operands.
+    """
     B, _, J, F = dig.shape
     _, _, K, _ = bsk.shape
+    dtype = jnp.dtype(dtype)
     bf = min(block_f, F)
     assert F % bf == 0
     return pl.pallas_call(
         _kernel,
-        out_shape=jax.ShapeDtypeStruct((B, 2, K, F), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, 2, K, F), dtype),
         grid=(F // bf,),
         in_specs=[
             pl.BlockSpec((B, 2, J, bf), lambda f: (0, 0, 0, f)),
@@ -54,4 +65,4 @@ def external_product_mac(dig: jax.Array, bsk: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((B, 2, K, bf), lambda f: (0, 0, 0, f)),
         interpret=interpret,
-    )(dig.astype(jnp.float32), bsk.astype(jnp.float32))
+    )(dig.astype(dtype), bsk.astype(dtype))

@@ -9,8 +9,16 @@ transpose.  On TPU the same factorization M = R*C maps onto the MXU:
     stage B:  X @ DFT_C^T     (row transforms — one matmul)
 
 The shutter-transpose becomes the (free) matmul operand layout change.
-Complex arithmetic is carried as separate re/im f32 planes (stacked
-axis), i.e. 4 real matmuls per complex matmul.
+Complex arithmetic is carried as separate re/im planes (stacked axis),
+i.e. 4 real matmuls per complex matmul.
+
+Precision: the kernel is dtype-polymorphic.  f32 is the TPU-native
+plane dtype (benchmark/standalone mode; relative error ~2e-5 of the
+spectrum scale).  The fused PBS engine path (`repro.kernels.fused_pbs`)
+runs the SAME kernel with f64 planes — interpret mode executes f64
+natively, and the scheme's noise budget needs the f64 accuracy for
+64-bit torus operands (a hardware TPU deployment would swap in the
+split-plane fixed-point path of the paper's Obs. 4 instead).
 
 Layout contract (matches `repro.core.fft` up to dtype):
     forward:  real coeffs (B, N) -> spectrum (B, 2, M), M = N/2,
@@ -35,9 +43,9 @@ def factor_m(M: int) -> tuple[int, int]:
     return r, M // r
 
 
-@functools.lru_cache(maxsize=16)
-def _constants(N: int, inverse: bool):
-    """Precompute twist, DFT matrices, twiddles as stacked re/im f32."""
+@functools.lru_cache(maxsize=32)
+def _constants(N: int, inverse: bool, dtype_name: str = "float32"):
+    """Precompute twist, DFT matrices, twiddles as stacked re/im planes."""
     M = N // 2
     R, C = factor_m(M)
     j = np.arange(M)
@@ -50,44 +58,46 @@ def _constants(N: int, inverse: bool):
             np.conj(dft_r) / R, np.conj(dft_c) / C, np.conj(tw), np.conj(twist))
     # NB: cache plain numpy (never jnp) — a jnp constant created inside a
     # jit trace is a Tracer and would leak through the lru_cache.
-    as32 = lambda z: np.stack([z.real, z.imag]).astype(np.float32)
-    return R, C, as32(twist), as32(dft_r), as32(dft_c), as32(tw)
+    as_planes = lambda z: np.stack([z.real, z.imag]).astype(dtype_name)
+    return R, C, as_planes(twist), as_planes(dft_r), as_planes(dft_c), as_planes(tw)
 
 
-def _cmatmul(ar, ai, br, bi):
-    """(ar+i*ai) @ (br+i*bi) with f32 accumulation on the MXU."""
-    dot = lambda x, y: jnp.dot(x, y, preferred_element_type=jnp.float32)
+def _cmatmul(ar, ai, br, bi, acc_dtype):
+    """(ar+i*ai) @ (br+i*bi) with plane-dtype accumulation on the MXU."""
+    dot = lambda x, y: jnp.dot(x, y, preferred_element_type=acc_dtype)
     return dot(ar, br) - dot(ai, bi), dot(ar, bi) + dot(ai, br)
 
 
-def _fwd_kernel(x_ref, twist_ref, dr_ref, dc_ref, tw_ref, o_ref, *, R, C, M):
+def _fwd_kernel(x_ref, twist_ref, dr_ref, dc_ref, tw_ref, o_ref, *, R, C, M,
+                acc_dtype):
     x = x_ref[0]                                   # (N,) real coeffs
     # fold + twist: u = (x_lo + i x_hi) * twist
     ur = x[:M] * twist_ref[0] - x[M:] * twist_ref[1]
     ui = x[:M] * twist_ref[1] + x[M:] * twist_ref[0]
     ar, ai = ur.reshape(R, C), ui.reshape(R, C)
     # stage A (FFT-A analogue): column DFT via MXU
-    er, ei = _cmatmul(dr_ref[0], dr_ref[1], ar, ai)
+    er, ei = _cmatmul(dr_ref[0], dr_ref[1], ar, ai, acc_dtype)
     # twiddle (between-stage rotation)
     br = er * tw_ref[0] - ei * tw_ref[1]
     bi = er * tw_ref[1] + ei * tw_ref[0]
     # stage B (FFT-B analogue): row DFT; transpose-of-output IS the
     # paper's shutter transpose, folded into the store layout.
-    fr, fi = _cmatmul(br, bi, dc_ref[0].T, dc_ref[1].T)
+    fr, fi = _cmatmul(br, bi, dc_ref[0].T, dc_ref[1].T, acc_dtype)
     o_ref[0, 0] = fr.T.reshape(M)
     o_ref[0, 1] = fi.T.reshape(M)
 
 
-def _inv_kernel(s_ref, twist_ref, dr_ref, dc_ref, tw_ref, o_ref, *, R, C, M):
+def _inv_kernel(s_ref, twist_ref, dr_ref, dc_ref, tw_ref, o_ref, *, R, C, M,
+                acc_dtype):
     sr = s_ref[0, 0].reshape(C, R).T               # undo output transpose
     si = s_ref[0, 1].reshape(C, R).T
     # inverse stage B
-    br, bi = _cmatmul(sr, si, dc_ref[0].T, dc_ref[1].T)
+    br, bi = _cmatmul(sr, si, dc_ref[0].T, dc_ref[1].T, acc_dtype)
     # un-twiddle
     er = br * tw_ref[0] - bi * tw_ref[1]
     ei = br * tw_ref[1] + bi * tw_ref[0]
     # inverse stage A
-    ar, ai = _cmatmul(dr_ref[0], dr_ref[1], er, ei)
+    ar, ai = _cmatmul(dr_ref[0], dr_ref[1], er, ei, acc_dtype)
     ur, ui = ar.reshape(M), ai.reshape(M)
     # untwist + unfold
     xr = ur * twist_ref[0] - ui * twist_ref[1]
@@ -105,37 +115,41 @@ def _const_specs(R, C, M):
     ]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def fft_forward(x: jax.Array, *, interpret: bool = True) -> jax.Array:
-    """Negacyclic forward transform: real (B, N) f32 -> (B, 2, N/2) f32."""
+@functools.partial(jax.jit, static_argnames=("interpret", "dtype"))
+def fft_forward(x: jax.Array, *, interpret: bool = True,
+                dtype=jnp.float32) -> jax.Array:
+    """Negacyclic forward transform: real (B, N) -> (B, 2, N/2) planes."""
     B, N = x.shape
     M = N // 2
     R, C = factor_m(M)
-    _, _, twist, dr, dc, tw = _constants(N, inverse=False)
-    kernel = functools.partial(_fwd_kernel, R=R, C=C, M=M)
+    dtype = jnp.dtype(dtype)
+    _, _, twist, dr, dc, tw = _constants(N, False, dtype.name)
+    kernel = functools.partial(_fwd_kernel, R=R, C=C, M=M, acc_dtype=dtype)
     return pl.pallas_call(
         kernel,
-        out_shape=jax.ShapeDtypeStruct((B, 2, M), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, 2, M), dtype),
         grid=(B,),
         in_specs=[pl.BlockSpec((1, N), lambda b: (b, 0))] + _const_specs(R, C, M),
         out_specs=pl.BlockSpec((1, 2, M), lambda b: (b, 0, 0)),
         interpret=interpret,
-    )(x.astype(jnp.float32), twist, dr, dc, tw)
+    )(x.astype(dtype), twist, dr, dc, tw)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def fft_inverse(spec: jax.Array, *, interpret: bool = True) -> jax.Array:
-    """Inverse: (B, 2, M) f32 -> real coeffs (B, 2M) f32."""
+@functools.partial(jax.jit, static_argnames=("interpret", "dtype"))
+def fft_inverse(spec: jax.Array, *, interpret: bool = True,
+                dtype=jnp.float32) -> jax.Array:
+    """Inverse: (B, 2, M) planes -> real coeffs (B, 2M)."""
     B, _, M = spec.shape
     N = 2 * M
     R, C = factor_m(M)
-    _, _, twist, dr, dc, tw = _constants(N, inverse=True)
-    kernel = functools.partial(_inv_kernel, R=R, C=C, M=M)
+    dtype = jnp.dtype(dtype)
+    _, _, twist, dr, dc, tw = _constants(N, True, dtype.name)
+    kernel = functools.partial(_inv_kernel, R=R, C=C, M=M, acc_dtype=dtype)
     return pl.pallas_call(
         kernel,
-        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, N), dtype),
         grid=(B,),
         in_specs=[pl.BlockSpec((1, 2, M), lambda b: (b, 0, 0))] + _const_specs(R, C, M),
         out_specs=pl.BlockSpec((1, N), lambda b: (b, 0)),
         interpret=interpret,
-    )(spec.astype(jnp.float32), twist, dr, dc, tw)
+    )(spec.astype(dtype), twist, dr, dc, tw)

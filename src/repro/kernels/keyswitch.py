@@ -92,11 +92,23 @@ def keyswitch_mac(digits: jax.Array, ksk_hi: jax.Array, ksk_lo: jax.Array, *,
                   block_s: int = 1024, interpret: bool = True):
     """digits (B, S) int32, ksk_hi/lo (S, T) uint32 -> (hi, lo) (B, T) uint32.
 
-    S flattens (n_from * level); T = n_to + 1.
+    S flattens (n_from * level); T = n_to + 1.  When S is not a multiple
+    of the block size, digits and key rows are zero-padded up to one —
+    zero digits contribute nothing to the MAC, so the result is
+    unchanged (the fused engine path hits this whenever
+    big_n * ks_level is not block-aligned).
     """
     B, S = digits.shape
     _, T = ksk_hi.shape
     bs = min(block_s, S)
+    pad = (-S) % bs
+    if pad:
+        zeros_d = jnp.zeros((B, pad), dtype=digits.dtype)
+        zeros_k = jnp.zeros((pad, T), dtype=ksk_hi.dtype)
+        digits = jnp.concatenate([digits, zeros_d], axis=1)
+        ksk_hi = jnp.concatenate([ksk_hi, zeros_k], axis=0)
+        ksk_lo = jnp.concatenate([ksk_lo, zeros_k], axis=0)
+        S += pad
     assert S % bs == 0 and bs <= 4096
     grid = (B, S // bs)
     out_shape = [

@@ -2,6 +2,11 @@
 
 `interpret=True` everywhere in this container (CPU); on a real TPU the
 flag flips to False with identical call signatures.
+
+`dtype` selects the transform-plane precision: f32 is the TPU-native
+mode, f64 is what the fused engine path (`repro.kernels.fused_pbs`)
+runs so the 64-bit torus noise budget holds in interpret mode.  The
+keyswitch MAC is uint32-limb exact regardless.
 """
 from __future__ import annotations
 
@@ -13,20 +18,21 @@ from repro.kernels import fourstep_fft, external_product, keyswitch, ref
 INTERPRET = True  # no TPU in this container; see DESIGN.md §5
 
 
-def negacyclic_fft(x: jax.Array) -> jax.Array:
-    """Forward negacyclic transform, (B, N) real -> (B, 2, N/2) f32."""
-    return fourstep_fft.fft_forward(x, interpret=INTERPRET)
+def negacyclic_fft(x: jax.Array, *, dtype=jnp.float32) -> jax.Array:
+    """Forward negacyclic transform, (B, N) real -> (B, 2, N/2) planes."""
+    return fourstep_fft.fft_forward(x, interpret=INTERPRET, dtype=dtype)
 
 
-def negacyclic_ifft(spec: jax.Array) -> jax.Array:
-    """(B, 2, M) -> (B, 2M) f32 coefficients."""
-    return fourstep_fft.fft_inverse(spec, interpret=INTERPRET)
+def negacyclic_ifft(spec: jax.Array, *, dtype=jnp.float32) -> jax.Array:
+    """(B, 2, M) -> (B, 2M) plane-dtype coefficients."""
+    return fourstep_fft.fft_inverse(spec, interpret=INTERPRET, dtype=dtype)
 
 
-def bru_mac(dig: jax.Array, bsk: jax.Array, *, block_f: int = 2048) -> jax.Array:
+def bru_mac(dig: jax.Array, bsk: jax.Array, *, block_f: int = 2048,
+            dtype=jnp.float32) -> jax.Array:
     """Blind-rotation MAC: (B,2,J,F) x (2,J,K,F) -> (B,2,K,F)."""
     return external_product.external_product_mac(
-        dig, bsk, block_f=block_f, interpret=INTERPRET
+        dig, bsk, block_f=block_f, interpret=INTERPRET, dtype=dtype
     )
 
 

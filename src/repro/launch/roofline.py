@@ -115,6 +115,86 @@ def model_flops(cfg, shape) -> float:
     return 2.0 * n_active * shape.global_batch
 
 
+@dataclasses.dataclass
+class PbsRoundModel:
+    """Analytic per-round traffic/bandwidth model of one fused `lut_batch`
+    round — the bound that gates the Pallas engine-room win.
+
+    `fused_bytes` is the paper's key-reuse traffic: the evaluation keys
+    stream from HBM ONCE per round regardless of batch size, plus O(B)
+    ciphertext/LUT rows.  `unfused_bytes` re-streams the keys per
+    ciphertext (the Morphling-XPU baseline, `lut_batch_xpu`).  The
+    measured `FusedPbsPack.bytes_streamed_per_round` must never exceed
+    `fused_bytes` (asserted by `benchmarks/kernels_bench.py`) — if it
+    does, the residency contract broke and the speedup story with it.
+    """
+    bsk_bytes: int
+    ksk_bytes: int
+    ct_in_bytes: int           # one (big_n+1) u64 row
+    ct_out_bytes: int
+    lut_bytes: int             # one (N,) u64 test polynomial
+    batch: int
+
+    @property
+    def key_bytes(self) -> int:
+        return self.bsk_bytes + self.ksk_bytes
+
+    @property
+    def per_ct_bytes(self) -> int:
+        return self.ct_in_bytes + self.ct_out_bytes + self.lut_bytes
+
+    @property
+    def fused_bytes(self) -> int:
+        """Keys once + per-ciphertext rows (key-reuse residency)."""
+        return self.key_bytes + self.batch * self.per_ct_bytes
+
+    @property
+    def unfused_bytes(self) -> int:
+        """Keys re-streamed per ciphertext (no reuse baseline)."""
+        return self.batch * (self.key_bytes + self.per_ct_bytes)
+
+    @property
+    def reuse_factor(self) -> float:
+        return self.unfused_bytes / self.fused_bytes
+
+    @property
+    def t_memory(self) -> float:
+        """HBM-bound wall clock of one fused round on the v5e model."""
+        return self.fused_bytes / HBM_BW
+
+    @property
+    def arithmetic_intensity_keys(self) -> float:
+        """MAC ops per key byte — scales with B under residency."""
+        return float(self.batch) / max(self.key_bytes, 1)
+
+    def to_dict(self) -> dict:
+        return {
+            "bsk_bytes": self.bsk_bytes, "ksk_bytes": self.ksk_bytes,
+            "per_ct_bytes": self.per_ct_bytes, "batch": self.batch,
+            "fused_bytes": self.fused_bytes,
+            "unfused_bytes": self.unfused_bytes,
+            "reuse_factor": self.reuse_factor,
+            "t_memory_s": self.t_memory,
+        }
+
+
+def pbs_round_model(params, batch: int) -> PbsRoundModel:
+    """Build the per-round bandwidth model from TFHE parameters.
+
+    Key bytes match `TaurusEngine.key_bytes` exactly: the Fourier BSK is
+    (n, k+1, level, k+1, N/2) complex128 and the KSK is
+    (big_n, ks_level, n+1) uint64 — the fused pack's plane/limb layouts
+    are byte-identical re-interpretations (2xf64 = c128, 2xu32 = u64),
+    so reference and pallas engines share one model.
+    """
+    n, k, N = params.n, params.k, params.N
+    bsk = n * (k + 1) * params.pbs_level * (k + 1) * (N // 2) * 16
+    ksk = params.big_n * params.ks_level * (n + 1) * 8
+    ct = (params.big_n + 1) * 8
+    return PbsRoundModel(bsk_bytes=bsk, ksk_bytes=ksk, ct_in_bytes=ct,
+                         ct_out_bytes=ct, lut_bytes=N * 8, batch=batch)
+
+
 def from_compiled(compiled, chips: int, mflops: float) -> Roofline:
     costs = hlo_analysis.analyze(compiled.as_text())
     return Roofline(

@@ -191,6 +191,10 @@ class ServeRuntime:
       ctx        TFHEContext whose evaluation keys execute the traffic.
       engine     TaurusEngine to dispatch batched PBS on (defaults to a
                  fresh engine over ctx's keys).
+      kernel_backend  "reference" | "pallas" engine room for the default
+                 engine (see `repro.core.engine`); invalid alongside a
+                 prebuilt engine.  Fused waves inherit it because the
+                 scheduler proxy dispatches through `engine.lut_batch`.
       fused      barrier concurrent requests' PBS rounds into shared
                  `lut_batch` dispatches via a `FusedLutScheduler`.
       dedup      online (ciphertext, table) row dedup inside fused rounds.
@@ -226,10 +230,15 @@ class ServeRuntime:
                  fault_hook: Optional[Callable] = None,
                  start_paused: bool = False,
                  intra_fuse: bool = True,
+                 kernel_backend: Optional[str] = None,
                  telemetry: Optional[Telemetry] = None):
         self.ctx = ctx
+        if kernel_backend is not None and engine is not None:
+            raise TypeError("pass kernel_backend OR a prebuilt engine, "
+                            "not both")
         self.engine = engine if engine is not None \
-            else TaurusEngine.from_context(ctx)
+            else TaurusEngine.from_context(
+                ctx, kernel_backend=kernel_backend or "reference")
         self.fused = fused
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self.scheduler = (FusedLutScheduler(dedup=dedup,

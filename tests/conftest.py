@@ -37,3 +37,13 @@ def engine_2bit(ctx_2bit):
 @pytest.fixture(scope="session")
 def engine_4bit(ctx_4bit):
     return TaurusEngine.from_context(ctx_4bit)
+
+
+@pytest.fixture(scope="session")
+def pallas_engine_2bit(ctx_2bit):
+    return TaurusEngine.from_context(ctx_2bit, kernel_backend="pallas")
+
+
+@pytest.fixture(scope="session")
+def pallas_engine_4bit(ctx_4bit):
+    return TaurusEngine.from_context(ctx_4bit, kernel_backend="pallas")

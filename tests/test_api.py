@@ -270,3 +270,39 @@ def test_const_ops_oracle_semantics():
         got = sum(int(x) << (i * m)
                   for i, x in enumerate(out[prog.graph.outputs[0]]))
         assert got == (v * 3 + 41 - 5) % MOD, v
+
+
+# --- Pallas engine-room parity (ISSUE 9) -------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["eager", "local", "serve"])
+def test_pallas_kernel_backend_parity(ctx_4bit, engine_4bit, backend):
+    """Radix add/mul/relu through every backend with
+    `kernel_backend="pallas"` decrypts IDENTICAL to the reference
+    engine: same ctx, same encryption key, so any plaintext difference
+    is a kernel precision bug.  Serve exercises the fused waves
+    (FusedLutScheduler routes them through engine.lut_batch, which is
+    where the backend switch lives)."""
+
+    def fn(a, b):
+        return a + b, a * b, (a - b).relu()
+
+    x, y = 173, 209
+    with Session(ctx_4bit, engine_4bit, backend=backend) as sess:
+        prog = sess.trace(fn, IntSpec(BITS), IntSpec(BITS))
+        want = sess(prog, jax.random.key(21), x, y)
+    with Session(ctx_4bit, backend=backend,
+                 kernel_backend="pallas") as sess:
+        assert sess.engine.kernel_backend == "pallas"
+        prog = sess.trace(fn, IntSpec(BITS), IntSpec(BITS))
+        got = sess(prog, jax.random.key(21), x, y)
+    assert [int(v) for v in got] == [int(v) for v in want]
+    assert int(got[0]) == (x + y) % MOD
+    assert int(got[1]) == (x * y) % MOD
+    assert int(got[2]) == 0          # x < y, so (x - y).relu() clamps to 0
+
+
+def test_session_kernel_backend_rejects_engine_conflict(ctx_4bit,
+                                                        engine_4bit):
+    with pytest.raises(TypeError, match="kernel_backend"):
+        Session(ctx_4bit, engine_4bit, kernel_backend="pallas")

@@ -223,6 +223,25 @@ def test_per_digit_noise_budget(ic4):
     assert np.max(np.abs(noise_m)) < budget
 
 
+@pytest.mark.slow
+def test_pallas_noise_budget_regression(ctx_4bit, pallas_engine_4bit):
+    """The Pallas engine room's PBS refresh keeps per-digit noise within
+    the same budget as the reference engine — the regression gate for
+    kernel transform precision (an f32-plane or limb bug would blow
+    past this long before decryption flips)."""
+    ic = IntegerContext.create(ctx_4bit, pallas_engine_4bit)
+    a, b = 0xBE, 0x34
+    ca = ic.encrypt(jax.random.key(90), a, 8)
+    cb = ic.encrypt(jax.random.key(91), b, 8)
+    budget = 1.0 / 2 ** (ic.params.width + 2)
+    s = ic.add(ca, cb)
+    assert ic.decrypt(s) == (a + b) % 2 ** 8
+    assert np.max(np.abs(ic.digit_noise(s, (a + b) % 2 ** 8))) < budget
+    m = ic.mul(ca, cb)
+    assert ic.decrypt(m) == (a * b) % 2 ** 8
+    assert np.max(np.abs(ic.digit_noise(m, (a * b) % 2 ** 8))) < budget
+
+
 # --- the round-plan cost model vs reality -----------------------------------
 
 @pytest.mark.parametrize("fixture,bits,strategy", [

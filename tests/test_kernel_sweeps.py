@@ -52,6 +52,63 @@ def test_keyswitch_mac_exact_sweep(S, T, B):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 2e-5),
+                                        (jnp.float64, 1e-12)])
+@pytest.mark.parametrize("N", [256, 2048, 8192])
+def test_fourstep_fft_dtype_sweep(N, dtype, rtol):
+    """The kernels are dtype-polymorphic: f32 (TPU-native) to ~2e-5 of
+    the spectrum scale, f64 (fused engine path) to ~1e-12."""
+    rng = np.random.default_rng(N)
+    x = rng.integers(-2 ** 20, 2 ** 20, (2, N)).astype(np.float64)
+    spec = fourstep_fft.fft_forward(jnp.asarray(x, dtype), dtype=dtype)
+    assert spec.dtype == jnp.dtype(dtype)
+    ref_spec = ref.fft_forward_ref(jnp.asarray(x, jnp.float64))
+    scale = np.abs(np.asarray(ref_spec)).max()
+    np.testing.assert_allclose(np.asarray(spec), np.asarray(ref_spec),
+                               atol=scale * rtol, rtol=0)
+    back = fourstep_fft.fft_inverse(spec, dtype=dtype)
+    np.testing.assert_allclose(np.asarray(back), x, atol=scale * rtol)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-2),
+                                       (jnp.float64, 1e-9)])
+@pytest.mark.parametrize("B", [1, 12])
+def test_external_product_mac_dtype_sweep(B, dtype, tol):
+    rng = np.random.default_rng(B)
+    dig = rng.normal(size=(B, 2, 4, 512)).astype(np.float64) * 100
+    bsk = rng.normal(size=(2, 4, 2, 512)).astype(np.float64)
+    got = external_product.external_product_mac(
+        jnp.asarray(dig, dtype), jnp.asarray(bsk, dtype),
+        block_f=256, dtype=dtype)
+    assert got.dtype == jnp.dtype(dtype)
+    want = ref.external_product_mac_ref(jnp.asarray(dig), jnp.asarray(bsk))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=tol)
+
+
+@pytest.mark.parametrize("width_fixture", ["2bit"])
+@pytest.mark.parametrize("B", [3, 12])
+def test_fused_pbs_sweep_batch_sizes(request, width_fixture, B):
+    """Fused-path differential across batch sizes on real key material
+    (the sweep-level view of the tests in test_kernels.py)."""
+    ctx = request.getfixturevalue(f"ctx_{width_fixture}")
+    eng_ref = request.getfixturevalue(f"engine_{width_fixture}")
+    eng_pal = request.getfixturevalue(f"pallas_engine_{width_fixture}")
+    from repro.core import glwe
+    p = ctx.params
+    key = jax.random.PRNGKey(B)
+    msgs = np.arange(B) % p.plaintext_modulus
+    cts = jnp.stack([ctx.encrypt(jax.random.fold_in(key, i), int(m))
+                     for i, m in enumerate(msgs)])
+    table = jnp.asarray([(2 * v) % p.plaintext_modulus
+                         for v in range(p.plaintext_modulus)],
+                        dtype=jnp.uint64)
+    polys = jnp.broadcast_to(glwe.make_lut_poly(table, p), (B, p.N))
+    dec_ref = [int(ctx.decrypt(v)) for v in eng_ref.lut_batch(cts, polys)]
+    dec_pal = [int(ctx.decrypt(v)) for v in eng_pal.lut_batch(cts, polys)]
+    assert dec_pal == dec_ref
+
+
 def test_fft_f32_precision_supports_48bit_claim():
     """Observation 4: the paper's 48-bit fixed point <-> our split path.
     A single f32 four-step FFT roundtrip keeps relative error ~1e-6 of

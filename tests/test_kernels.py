@@ -116,3 +116,150 @@ def test_keyswitch_mac_grid_accumulation():
         got = np.asarray(ops.lpu_keyswitch_mac(digits, ksk, block_s=bs))
         want = np.asarray(ref.keyswitch_mac_ref(digits, ksk))
         np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("S,block_s", [(100, 64), (2560, 1024), (33, 32)])
+def test_keyswitch_mac_unaligned_block_padding(S, block_s):
+    """S not a multiple of the block size zero-pads exactly (the fused
+    engine hits this whenever big_n*ks_level is not block-aligned)."""
+    rng = np.random.default_rng(S)
+    digits = jnp.asarray(rng.integers(-(1 << 12), 1 << 12, (2, S)), dtype=jnp.int32)
+    ksk = jnp.asarray(rng.integers(0, 1 << 64, (S, 65), dtype=np.uint64))
+    got = np.asarray(ops.lpu_keyswitch_mac(digits, ksk, block_s=block_s))
+    want = np.asarray(ref.keyswitch_mac_ref(digits, ksk))
+    np.testing.assert_array_equal(got, want)
+
+
+# --- fused engine room (repro.kernels.fused_pbs) -----------------------------
+#
+# The differential contract of the tentpole: every fused entry point
+# graded against the reference engine path on real key material, the
+# keyswitch stage bit-for-bit.
+
+def _encrypt_batch(ctx, B):
+    key = jax.random.PRNGKey(97)
+    msgs = np.arange(B) % ctx.params.plaintext_modulus
+    cts = jnp.stack([ctx.encrypt(jax.random.fold_in(key, i), int(m))
+                     for i, m in enumerate(msgs)])
+    return cts, msgs
+
+
+def test_keyswitch_fused_bit_identical(ctx_2bit, pallas_engine_2bit):
+    """Fused uint32-limb keyswitch == lwe.keyswitch, bit-for-bit."""
+    from repro.core import lwe
+    p = ctx_2bit.params
+    cts, _ = _encrypt_batch(ctx_2bit, 5)
+    want = lwe.keyswitch(cts, ctx_2bit.ksk, p.ks_base_log, p.ks_level)
+    got = pallas_engine_2bit.fused_pack.keyswitch(cts)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("B", [1, 4])
+def test_blind_rotate_fused_matches_reference(ctx_2bit, pallas_engine_2bit, B):
+    """Fused blind rotation (FFT + BRU MAC kernels, f64 planes) extracts
+    to the same decrypted digits as the complex128 reference.
+
+    NB: raw GLWE coefficients are NOT compared — after the first CMux
+    round, ~2^29 transform-rounding differences can flip a gadget-
+    decompose digit at a rounding boundary, swinging individual mask
+    coefficients by a whole GGSW row while the PHASE (what decrypts)
+    moves only ~2^40 << delta.  The decrypt-level contract is the
+    meaningful one for chained CMux."""
+    from repro.core import batch as batch_mod, glwe, lwe
+    p = ctx_2bit.params
+    cts, msgs = _encrypt_batch(ctx_2bit, B)
+    small = lwe.keyswitch(cts, ctx_2bit.ksk, p.ks_base_log, p.ks_level)
+    ms = lwe.mod_switch(small, p.log2_N + 1)
+    table = jnp.arange(p.plaintext_modulus, dtype=jnp.uint64)
+    poly = glwe.make_lut_poly(table, p)
+    luts = glwe.trivial(jnp.broadcast_to(poly, (B, p.N)), p.k)
+    want = glwe.sample_extract(
+        batch_mod.blind_rotate_batch(luts, ms, ctx_2bit.bsk_f, p))
+    got = glwe.sample_extract(
+        pallas_engine_2bit.fused_pack.blind_rotate(luts, ms))
+    dec_ref = [int(ctx_2bit.decrypt(v)) for v in want]
+    dec_pal = [int(ctx_2bit.decrypt(v)) for v in got]
+    assert dec_pal == dec_ref == [int(m) for m in msgs]
+
+
+@pytest.mark.parametrize("B", [1, 5, 12])
+def test_pbs_batch_fused_decrypt_identical(ctx_2bit, engine_2bit,
+                                           pallas_engine_2bit, B):
+    """End-to-end fused lut_batch decrypts identically to reference."""
+    from repro.core import glwe
+    p = ctx_2bit.params
+    cts, msgs = _encrypt_batch(ctx_2bit, B)
+    table = jnp.asarray([(3 * v + 1) % p.plaintext_modulus
+                         for v in range(p.plaintext_modulus)], dtype=jnp.uint64)
+    polys = jnp.broadcast_to(glwe.make_lut_poly(table, p), (B, p.N))
+    out_ref = engine_2bit.lut_batch(cts, polys)
+    out_pal = pallas_engine_2bit.lut_batch(cts, polys)
+    dec_ref = [int(ctx_2bit.decrypt(v)) for v in out_ref]
+    dec_pal = [int(ctx_2bit.decrypt(v)) for v in out_pal]
+    assert dec_pal == dec_ref == [(3 * int(m) + 1) % p.plaintext_modulus
+                                  for m in msgs]
+
+
+@pytest.mark.slow
+def test_pbs_batch_fused_decrypt_identical_4bit(ctx_4bit, engine_4bit,
+                                                pallas_engine_4bit):
+    """Same differential at 4-bit params (N=2048): the noise margin is
+    tighter, so this catches precision regressions the 2-bit set hides."""
+    from repro.core import glwe
+    p = ctx_4bit.params
+    cts, msgs = _encrypt_batch(ctx_4bit, 6)
+    table = jnp.asarray([(v * v) % p.plaintext_modulus
+                         for v in range(p.plaintext_modulus)], dtype=jnp.uint64)
+    polys = jnp.broadcast_to(glwe.make_lut_poly(table, p), (6, p.N))
+    dec_ref = [int(ctx_4bit.decrypt(v))
+               for v in engine_4bit.lut_batch(cts, polys)]
+    dec_pal = [int(ctx_4bit.decrypt(v))
+               for v in pallas_engine_4bit.lut_batch(cts, polys)]
+    assert dec_pal == dec_ref == [(int(m) ** 2) % p.plaintext_modulus
+                                  for m in msgs]
+
+
+def test_fused_pack_resident_across_rounds(ctx_2bit, pallas_engine_2bit):
+    """The key-reuse contract: ONE pack (same device arrays) services
+    multiple chained PBS rounds, and round i+1 consumes round i's output
+    correctly (the BSK-resident multi-round path)."""
+    from repro.core import glwe
+    eng = pallas_engine_2bit
+    p = ctx_2bit.params
+    pack0 = eng.fused_pack
+    cts, msgs = _encrypt_batch(ctx_2bit, 4)
+    table = jnp.asarray([(v + 1) % p.plaintext_modulus
+                         for v in range(p.plaintext_modulus)], dtype=jnp.uint64)
+    polys = jnp.broadcast_to(glwe.make_lut_poly(table, p), (4, p.N))
+    out = cts
+    for round_i in range(3):
+        out = eng.lut_batch(out, polys)
+        assert eng.fused_pack is pack0          # no rebuild between rounds
+        assert eng.fused_pack.bsk_planes is pack0.bsk_planes
+    dec = [int(ctx_2bit.decrypt(v)) for v in out]
+    assert dec == [(int(m) + 3) % p.plaintext_modulus for m in msgs]
+
+
+def test_fused_pack_bytes_within_roofline_bound(pallas_engine_2bit):
+    """Bandwidth gate: the pack's streamed bytes per fused round must sit
+    within the analytic `launch.roofline.pbs_round_model` bound, and key
+    bytes must equal the reference engine's ledger quantity exactly."""
+    from repro.launch.roofline import pbs_round_model
+    eng = pallas_engine_2bit
+    pack = eng.fused_pack
+    for B in (1, 12, 48):
+        model = pbs_round_model(eng.params, B)
+        assert pack.bytes_streamed_per_round(B) <= model.fused_bytes
+        # key reuse only pays off past B=1 (at B=1 the two are equal)
+        assert model.fused_bytes <= model.unfused_bytes
+        if B > 1:
+            assert model.fused_bytes < model.unfused_bytes
+    bsk_b, ksk_b = pack.resident_key_bytes
+    assert (bsk_b, ksk_b) == eng.key_bytes
+
+
+def test_engine_kernel_backend_validation(ctx_2bit):
+    """Bad backend strings and mesh+pallas are rejected at build time."""
+    from repro.core.engine import TaurusEngine
+    with pytest.raises(ValueError, match="kernel_backend"):
+        TaurusEngine.from_context(ctx_2bit, kernel_backend="cuda")

@@ -33,6 +33,80 @@ def test_decompose_recompose_error_bound(vals, base_log, level):
     assert int(jnp.max(jnp.abs(err))) <= bound
 
 
+# values that stress limb boundaries: all-ones/zero in either uint32
+# limb, sign-bit edges, and the carry-chain corners of 16-bit sub-limbs
+_LIMB_EDGES = [0, 1, 0xFFFF, 0x10000, 0xFFFFFFFF, 0x100000000,
+               0xFFFF0000FFFF0000, 0x0000FFFF0000FFFF,
+               (1 << 63) - 1, 1 << 63, (1 << 64) - 1]
+_u64 = st.one_of(st.sampled_from(_LIMB_EDGES),
+                 st.integers(0, 2 ** 64 - 1))
+_digit = st.one_of(st.sampled_from([0, 1, -1, (1 << 31) - 1, -(1 << 31),
+                                    0x7FFF, -0x8000, 0x10000]),
+                   st.integers(-(1 << 31), (1 << 31) - 1))
+
+
+@given(st.lists(_digit, min_size=1, max_size=8),
+       st.lists(_u64, min_size=1, max_size=8))
+@_SET
+def test_limb_mul64_matches_python_int(digits, keys):
+    """The kernel's 16-bit-sub-limb 64-bit multiply (`_mul64`) == exact
+    Python int arithmetic mod 2^64, including carry/overflow edges at
+    every limb boundary."""
+    from repro.kernels.keyswitch import _mul64
+    n = min(len(digits), len(keys))
+    d = np.array(digits[:n], dtype=np.int32)
+    k = np.array(keys[:n], dtype=np.uint64)
+    du_lo = jnp.asarray(d.astype(np.uint32))
+    du_hi = jnp.asarray((d >> 31).astype(np.uint32))
+    k_hi = jnp.asarray((k >> np.uint64(32)).astype(np.uint32))
+    k_lo = jnp.asarray((k & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    hi, lo = _mul64(du_hi, du_lo, k_hi, k_lo)
+    got = (np.asarray(hi).astype(np.uint64) << np.uint64(32)) \
+        | np.asarray(lo).astype(np.uint64)
+    want = np.array([(int(a) * int(b)) % (1 << 64)
+                     for a, b in zip(d.tolist(), k.tolist())],
+                    dtype=np.uint64)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.lists(_digit, min_size=1, max_size=64),
+       st.lists(_u64, min_size=1, max_size=4),
+       st.integers(1, 64))
+@_SET
+def test_keyswitch_mac_exact_vs_python_int(digits, keys, block_s):
+    """The whole limb MAC kernel (interpret mode), random torus keys and
+    digits at limb edges, any block size == exact big-int dot mod 2^64."""
+    from repro.kernels import ops
+    S, T = len(digits), len(keys)
+    d = np.array(digits, dtype=np.int32)[None, :]          # B=1
+    ksk = np.tile(np.array(keys, dtype=np.uint64), (S, 1))
+    rng = np.random.default_rng(S * T)
+    ksk ^= rng.integers(0, 1 << 64, (S, T), dtype=np.uint64)
+    got = np.asarray(ops.lpu_keyswitch_mac(
+        jnp.asarray(d), jnp.asarray(ksk), block_s=block_s))[0]
+    want = np.array(
+        [sum(int(d[0, s]) * int(ksk[s, t]) for s in range(S)) % (1 << 64)
+         for t in range(T)], dtype=np.uint64)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.lists(_u64, min_size=1, max_size=16),
+       st.integers(2, 16), st.integers(1, 4))
+@_SET
+def test_decompose_recompose_limb_edges(vals, base_log, level):
+    """decompose/recompose round-trip at limb-boundary torus values:
+    carries crossing the uint32 seam and sign-bit edges stay within the
+    gadget's rounding bound (same invariant as the random-value test,
+    pinned on the adversarial corners the fused keyswitch feeds)."""
+    v = jnp.asarray(np.array(vals, dtype=np.uint64))
+    digits = dec.decompose(v, base_log, level)
+    assert int(jnp.max(jnp.abs(digits))) <= (1 << base_log) // 2
+    back = dec.recompose(digits, base_log, level)
+    err = torus.to_signed(back - v)
+    bound = 1 << max(64 - base_log * level - 1, 0)
+    assert int(jnp.max(jnp.abs(err))) <= bound
+
+
 @given(st.integers(0, 2 ** 32), st.integers(0, 2 ** 32))
 @_SET
 def test_torus_add_homomorphic(a, b):
