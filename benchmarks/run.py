@@ -32,6 +32,12 @@ ALL = ["fig5", "table2", "table4", "fig13", "fig15", "dedup", "engine",
 SERVE_OBS_COLUMNS = ("p50_s", "p99_s", "bsk_bytes_saved")
 SERVE_BENCH_NAMES = ("serve", "fhe_ml")
 
+# the columns every point of the serve benchmark's shard_scaling row
+# must carry (the sharded-serving PR's dry-run contract; the nightly
+# shard sweep's BENCH_serve.json consumers key on these)
+SERVE_SCALING_COLUMNS = ("shards", "requests_per_s", "per_shard_occupancy",
+                         "occupancy_ratio")
+
 # the SLO columns every sim row must carry (BENCH_sim.json consumers
 # key on these; the repro.sim PR's dry-run contract)
 SIM_SLO_COLUMNS = ("p50_s", "p99_s", "queue_wait_p99_s", "abandon_rate",
@@ -69,6 +75,11 @@ def _dry_run_checks(mods: dict, which: list) -> list:
         missing = [c for c in SERVE_OBS_COLUMNS if c not in cols]
         if missing:
             bad.append(f"{n}: BENCH_COLUMNS missing {missing}")
+    if "serve" in which:
+        cols = tuple(getattr(mods["serve"], "SCALING_COLUMNS", ()))
+        missing = [c for c in SERVE_SCALING_COLUMNS if c not in cols]
+        if missing:
+            bad.append(f"serve: SCALING_COLUMNS missing {missing}")
     if "sim" in which:
         cols = tuple(getattr(mods["sim"], "BENCH_COLUMNS", ()))
         missing = [c for c in SIM_SLO_COLUMNS if c not in cols]

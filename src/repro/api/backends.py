@@ -274,7 +274,12 @@ class ServeBackend:
     """Submits programs through a `ServeRuntime`: the session's traffic
     joins cross-request fused PBS rounds and online dedup, and a traced
     program's tensor-level radix nodes flatten into per-vector rounds
-    that fuse intra-request (`IrInterpreter` vector fan-out)."""
+    that fuse intra-request (`IrInterpreter` vector fan-out).
+
+    Runtime keywords thread straight through — `Session(ctx,
+    backend="serve", shards=2, elastic=True, max_inflight=8)` builds a
+    sharded runtime exactly like calling `ServeRuntime` directly (the
+    `shards=` knob rides the same path `kernel_backend=` does)."""
 
     name = "serve"
 
@@ -318,8 +323,9 @@ _BACKENDS = {"eager": EagerBackend, "local": LocalBackend,
 def make_backend(name: str, ctx, engine=None, *, kernel_backend=None, **kw):
     """Construct a named backend ("eager" | "local" | "serve") over the
     given key material; extra keywords forward to the backend's
-    constructor (e.g. `fused=True` for local, `max_inflight=8` for
-    serve).  `kernel_backend="reference" | "pallas"` selects the engine
+    constructor (e.g. `fused=True` for local, `max_inflight=8` or
+    `shards=2` for serve).
+    `kernel_backend="reference" | "pallas"` selects the engine
     room when no prebuilt engine is passed (see `repro.core.engine`).
     `Session` calls this for string backends; use it directly to share
     one backend across sessions::

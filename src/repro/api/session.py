@@ -90,7 +90,11 @@ class Session:
     `Backend` protocol (`execute(program, enc_inputs) -> outputs`).
     Extra keyword arguments are forwarded to the named backend's
     constructor (e.g. `max_inflight=8` for "serve", `fused=True` for
-    "local").
+    "local").  The sharded serving knobs thread the same way:
+    `Session(ctx, backend="serve", shards=2, elastic=True)` serves this
+    session's traffic through a 2-shard `ServeRuntime` with elastic
+    per-shard admission — `shards=1` stays decrypt-identical to the
+    single-shard runtime on every backend.
 
     kernel_backend: "reference" | "pallas" — which PBS engine room the
     session's `TaurusEngine` runs (see `repro.core.engine`).  Only valid

@@ -86,6 +86,30 @@ def pbs_batch(big_cts: jax.Array, lut_polys: jax.Array, bsk_f: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("params",))
+def keyswitch_batch_jit(big_cts: jax.Array, ksk: jax.Array,
+                        params: TFHEParams) -> jax.Array:
+    """Standalone jitted keyswitch stage — the first half of `pbs_batch`,
+    split out so the serving scheduler can key-switch a batch of UNIQUE
+    ciphertexts once and fan the small-key results out to every
+    (ciphertext, table) row that shares them (KS-level partial dedup)."""
+    return keyswitch_batch(big_cts, ksk, params)
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def pbs_batch_small(small_cts: jax.Array, lut_polys: jax.Array,
+                    bsk_f: jax.Array, params: TFHEParams) -> jax.Array:
+    """PBS minus the keyswitch: (B, n+1) small-key cts + (B, N) LUTs ->
+    (B, k*N+1).  Composing `keyswitch_batch_jit` then this function is
+    arithmetically identical to `pbs_batch` — both run the same
+    mod-switch / blind-rotate / sample-extract stages on the same
+    small-key ciphertexts."""
+    ms = lwe.mod_switch(small_cts, params.log2_N + 1)
+    luts = glwe.trivial(lut_polys, params.k)
+    acc = blind_rotate_batch(luts, ms, bsk_f, params)
+    return glwe.sample_extract(acc)
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
 def pbs_unbatched_loop(big_cts: jax.Array, lut_polys: jax.Array,
                        bsk_f: jax.Array, ksk: jax.Array,
                        params: TFHEParams) -> jax.Array:

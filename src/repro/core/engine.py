@@ -34,6 +34,22 @@ from repro.core.params import TFHEParams
 U64 = jnp.uint64
 
 
+class ConfigError(ValueError):
+    """An unsupported engine/runtime configuration, rejected at
+    construction time (not at first `lut_batch`).
+
+    Supported (kernel_backend, mesh) combinations:
+
+      reference + mesh=None   single-device jax reference PBS
+      reference + mesh        SPMD `pbs_batch` sharded over the data axis
+      pallas    + mesh=None   fused Pallas engine room, per-device
+
+    pallas + mesh is NOT supported: the fused kernels run per-device.
+    The sharded `ServeRuntime` routes around this — a multi-device shard
+    requesting the pallas backend gets a single-device engine instead of
+    raising here (see `repro.serve.shard.build_shards`)."""
+
+
 def validate_lut_tables(cts: jax.Array, tables, params: TFHEParams):
     """Normalize/validate per-ciphertext integer LUT tables against a
     batch: broadcast a single (2^width,) table across the batch, reject
@@ -78,10 +94,14 @@ class TaurusEngine:
                 f"kernel_backend must be 'reference' or 'pallas', "
                 f"got {self.kernel_backend!r}")
         if self.kernel_backend == "pallas" and self.mesh is not None:
-            raise NotImplementedError(
-                "kernel_backend='pallas' does not support mesh sharding "
-                "yet — the fused kernels run per-device; use the "
-                "reference backend for multi-cluster meshes")
+            raise ConfigError(
+                "kernel_backend='pallas' + mesh is not a supported engine "
+                "configuration — the fused kernels run per-device. "
+                "Supported combinations: reference + mesh=None, "
+                "reference + mesh, pallas + mesh=None. Use the reference "
+                "backend for multi-cluster meshes, or drop the mesh for "
+                "the pallas engine room (the sharded ServeRuntime does "
+                "the latter automatically).")
 
     # -- derived -----------------------------------------------------------
     @property
@@ -112,6 +132,14 @@ class TaurusEngine:
         if self.mesh is None:
             return 1
         return self.mesh.shape[self.data_axis]
+
+    @property
+    def supports_ks_split(self) -> bool:
+        """Whether `keyswitch` + `lut_batch_small` may replace a
+        `lut_batch` (the serving scheduler's KS-level partial dedup).
+        Single-device engines only: the mesh path runs one SPMD program
+        per full PBS round and has no sharded half-round entry."""
+        return self.mesh is None
 
     @property
     def batch_size(self) -> int:
@@ -183,6 +211,61 @@ class TaurusEngine:
             tel.counter("engine.pbs_rows_padded").inc(pad)
             tel.histogram("engine.lut_batch_rows").observe(B)
         return out[:B]
+
+    # -- the split PBS entries (KS-level partial dedup, ISSUE 10) -----------
+    def keyswitch(self, big_cts: jax.Array) -> jax.Array:
+        """The keyswitch stage alone: (B, k*N+1) big-key cts ->
+        (B, n+1) small-key cts.  Bit-identical to the first stage of
+        `lut_batch` on both backends (the pallas limb kernel is exact
+        mod 2^64), so key-switching each UNIQUE ciphertext once and
+        fanning the result out across its tables is decrypt-identical
+        to key-switching every row."""
+        if not self.supports_ks_split:
+            raise ConfigError(
+                "keyswitch/lut_batch_small need a single-device engine "
+                "(supports_ks_split) — the mesh path dispatches full PBS "
+                "rounds only")
+        if self.kernel_backend == "pallas":
+            return self.fused_pack.keyswitch(big_cts)
+        return batch_mod.keyswitch_batch_jit(big_cts, self.ksk, self.params)
+
+    def lut_batch_small(self, small_cts: jax.Array,
+                        lut_polys: jax.Array) -> jax.Array:
+        """`lut_batch` minus the keyswitch: (B, n+1) small-key cts +
+        (B, N) LUT polys -> (B, k*N+1) refreshed big-key cts.
+        `keyswitch` then `lut_batch_small` computes exactly what
+        `lut_batch` computes."""
+        if not self.supports_ks_split:
+            raise ConfigError(
+                "lut_batch_small needs a single-device engine "
+                "(supports_ks_split) — the mesh path dispatches full PBS "
+                "rounds only")
+        B = small_cts.shape[0]
+        if lut_polys.shape[0] != B:
+            raise ValueError(
+                f"lut_batch_small: {B} ciphertexts but "
+                f"{lut_polys.shape[0]} LUT polynomials — counts must "
+                f"match per batch row")
+        tel = self.telemetry
+        span = (tel.span("lut_batch_small", cat="engine", rows=B)
+                if tel is not None else None)
+        if span is not None:
+            span.__enter__()
+        try:
+            if self.kernel_backend == "pallas":
+                out = self.fused_pack.pbs_from_small(small_cts, lut_polys)
+            else:
+                out = batch_mod.pbs_batch_small(small_cts, lut_polys,
+                                                self.bsk_f, self.params)
+        finally:
+            if span is not None:
+                span.__exit__(None, None, None)
+        if tel is not None:
+            tel.counter(f"engine.lut_batches_{self.kernel_backend}").inc()
+            tel.counter("engine.lut_batches").inc()
+            tel.counter("engine.pbs_rows").inc(B)
+            tel.histogram("engine.lut_batch_rows").observe(B)
+        return out
 
     def lut_batch_tables(self, cts: jax.Array, tables) -> jax.Array:
         """lut_batch from per-ciphertext INTEGER tables (B, 2^width):

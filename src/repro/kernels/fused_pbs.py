@@ -154,6 +154,26 @@ def pbs_batch_fused(big_cts: jax.Array, lut_polys: jax.Array,
     return glwe.sample_extract(acc)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("params", "dtype", "block_f",
+                                    "interpret"))
+def pbs_small_fused(small_cts: jax.Array, lut_polys: jax.Array,
+                    bsk_planes: jax.Array, params: TFHEParams, *,
+                    dtype=jnp.float64, block_f: int = 2048,
+                    interpret: bool = True) -> jax.Array:
+    """`pbs_batch_fused` minus the keyswitch: (B, n+1) small-key cts +
+    (B, N) LUT polys -> (B, k*N+1).  `keyswitch_fused` followed by this
+    function runs exactly the stages of `pbs_batch_fused`, so the
+    serving scheduler's KS-level partial dedup (key-switch unique
+    ciphertexts once, blind-rotate every table) stays decrypt-identical
+    on the pallas backend too."""
+    ms = lwe.mod_switch(small_cts, params.log2_N + 1)
+    luts = glwe.trivial(lut_polys, params.k)
+    acc = blind_rotate_fused(luts, ms, bsk_planes, params, dtype=dtype,
+                             block_f=block_f, interpret=interpret)
+    return glwe.sample_extract(acc)
+
+
 @dataclasses.dataclass
 class FusedPbsPack:
     """Resident kernel operands for one evaluation-key pair.
@@ -199,6 +219,14 @@ class FusedPbsPack:
                                   self.params, dtype=self.dtype,
                                   block_f=self.block_f,
                                   interpret=self.interpret)
+
+    def pbs_from_small(self, small_cts: jax.Array,
+                       lut_polys: jax.Array) -> jax.Array:
+        """PBS resumed after `keyswitch`: the KS-level-dedup half-round."""
+        return pbs_small_fused(small_cts, lut_polys, self.bsk_planes,
+                               self.params, dtype=self.dtype,
+                               block_f=self.block_f,
+                               interpret=self.interpret)
 
     # -- bandwidth accounting (gated by launch/roofline.py) -----------------
     @property

@@ -42,6 +42,37 @@ def make_host_mesh(model: int = 1) -> Mesh:
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def shard_devices(n_shards: int, devices=None) -> list:
+    """Device -> serving-shard assignment for the sharded `ServeRuntime`
+    (ISSUE 10): partition the healthy device list into `n_shards`
+    per-shard device tuples.
+
+    With >= n_shards devices, each shard gets a contiguous slice of
+    len(devices) // n_shards devices (remainder devices are left idle so
+    shards stay symmetric — a lopsided shard would cap the fleet's
+    near-linear scaling).  With FEWER devices than shards (the CPU test
+    container: one device, several shards), shards share devices
+    round-robin — shard i gets device i % n_devices; oversubscription is
+    explicit in the returned assignment rather than hidden.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    devs = list(devices if devices is not None else jax.devices())
+    if not devs:
+        raise RuntimeError("no devices available for shard assignment")
+    if len(devs) >= n_shards:
+        per = len(devs) // n_shards
+        return [tuple(devs[i * per:(i + 1) * per]) for i in range(n_shards)]
+    return [(devs[i % len(devs)],) for i in range(n_shards)]
+
+
+def shard_mesh(devices) -> Mesh:
+    """A 1-D ("data",) mesh over one shard's devices — the engine-group
+    topology a multi-device `EngineShard` runs its SPMD PBS rounds on."""
+    import numpy as _np
+    return Mesh(_np.array(list(devices)), ("data",))
+
+
 def batch_axes(mesh: Mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 

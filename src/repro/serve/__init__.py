@@ -40,10 +40,13 @@ Encrypted-LLM traffic rides the same queue: `fhe_ml_block_program`
 (or `repro.fhe_ml.lower.lower_gpt2_block_radix` directly) lowers a
 transformer block onto 16/32-bit radix activations whose rounds fuse
 with every other in-flight request — see docs/ARCHITECTURE.md for the
-full data path.  Remaining scaling PRs plug in here too: sharded
-serving splits the scheduler's engine groups across hosts, elastic
-capacity resizes `max_inflight`.
+full data path.  The runtime is SHARDED (ISSUE 10): `ServeRuntime` is
+the router (admission, fairness, placement) over N `EngineShard`
+workers, each owning its own engine group, fusion barrier, and resident
+evaluation keys, with per-shard `max_inflight` resized live by
+`repro.runtime.elastic.ElasticAdmission` when `elastic=True`.
 """
+from repro.core.engine import ConfigError
 from repro.serve.interpreter import IrInterpreter
 from repro.serve.programs import (decrypt_radix_output,
                                   encrypt_request_inputs,
@@ -54,12 +57,15 @@ from repro.serve.runtime import (AdmissionError, OutputFuture,
                                  RuntimeClosedError, ServeRequest,
                                  ServeRuntime, SubmitValidationError)
 from repro.serve.scheduler import FusedEngineProxy, FusedLutScheduler
+from repro.serve.shard import EngineShard, build_shards
 
 __all__ = [
-    "AdmissionError", "FusedEngineProxy", "FusedLutScheduler",
+    "AdmissionError", "ConfigError", "EngineShard", "FusedEngineProxy",
+    "FusedLutScheduler",
     "IrInterpreter", "OutputFuture", "RequestAbandonedError",
     "RequestHandle", "RuntimeClosedError",
     "ServeRequest", "ServeRuntime", "SubmitValidationError",
+    "build_shards",
     "decrypt_radix_output", "encrypt_request_inputs",
     "fhe_ml_block_program", "radix_binop_program", "radix_unop_program",
 ]

@@ -7,7 +7,12 @@ multi-tenant runtime:
 
   * every bootstrap goes through `engine.lut_batch` — hand it a
     `FusedEngineProxy` and all of a request's PBS rounds fuse with every
-    other in-flight request's rounds (cross-request key reuse + dedup);
+    other in-flight request's rounds (cross-request key reuse + dedup).
+    In the sharded runtime (ISSUE 10) that proxy is
+    `EngineShard.worker_engine()`: the interpreter is the execution
+    body of ONE shard's worker, its rounds barrier only with requests
+    the router placed on the same shard, and the proxy's KS-level dedup
+    shares keyswitches between rows that differ only in table;
   * a tensor-level radix node over V > 1 digit vectors FLATTENS into V
     per-vector round streams executed on concurrent worker threads, each
     registered with the shared `FusedLutScheduler` — so the vectors of

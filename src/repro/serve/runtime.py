@@ -1,16 +1,27 @@
-"""Multi-tenant serving runtime: request queue, admission control,
-per-client fairness, fault retry.
+"""Multi-tenant serving runtime: a front-door ROUTER over N engine
+shards — request queue, admission control, per-client fairness, request
+placement, fault retry.
 
 `ServeRuntime.submit(graph, enc_inputs, client_id)` returns a
 `RequestHandle` immediately (async queue semantics — `handle.wait()`
 joins the result).  Admission pulls queued requests round-robin across
 clients, so one client flooding the queue cannot starve another: a
 request is admitted within (#clients x its position in its own client's
-queue + #clients) admissions, which `tests/test_serve.py` bounds.  At
-most `max_inflight` requests execute concurrently (each on a worker
-thread whose PBS rounds fuse through `FusedLutScheduler`), and each
-client's backlog is capped at `max_queued_per_client` — beyond it
-`submit` raises `AdmissionError` (shed load at the door, not mid-round).
+queue + #clients) admissions, which `tests/test_serve.py` bounds.
+
+Execution is SHARDED (ISSUE 10): the router places each admitted
+request on an `EngineShard` (`repro.serve.shard`) — parameter-set
+filter, then least-loaded, then lowest index — and each shard runs its
+own engine group, fusion barrier, and resident evaluation keys.  At
+most `max_inflight` requests execute concurrently PER SHARD (each on a
+worker thread whose PBS rounds fuse through the shard's
+`FusedLutScheduler`); with `elastic=True` the per-shard limit is a live
+`ElasticAdmission` grant driven by queue depth and recent fused-wave
+occupancy, with `max_inflight` as the hard ceiling.  Each client's
+backlog is capped at `max_queued_per_client` — beyond it `submit`
+raises `AdmissionError` (shed load at the door, not mid-round).
+`shards=1` (the default) is the single-shard special case and behaves
+exactly like the pre-shard runtime.
 
 Failures retry through `repro.runtime.fault.StepRunner`: a request whose
 execution raises (a poisoned round, a device loss) is re-run from its
@@ -31,7 +42,7 @@ from repro.core.engine import TaurusEngine
 from repro.obs import StatsView, Telemetry
 from repro.runtime.fault import FaultConfig, StepRunner
 from repro.serve.interpreter import IrInterpreter
-from repro.serve.scheduler import FusedLutScheduler
+from repro.serve.shard import EngineShard, build_shards
 
 
 class AdmissionError(RuntimeError):
@@ -185,20 +196,42 @@ class RequestHandle:
 
 
 class ServeRuntime:
-    """The multi-tenant FHE serving front door.
+    """The multi-tenant FHE serving front door: router + engine shards.
 
     Args (all keyword-only beyond ctx/engine):
       ctx        TFHEContext whose evaluation keys execute the traffic.
-      engine     TaurusEngine to dispatch batched PBS on (defaults to a
-                 fresh engine over ctx's keys).
-      kernel_backend  "reference" | "pallas" engine room for the default
-                 engine (see `repro.core.engine`); invalid alongside a
+      engine     TaurusEngine shard 0 dispatches batched PBS on
+                 (defaults to a fresh engine over ctx's keys); shards
+                 beyond the first always build their own engine from ctx
+                 with the same kernel backend (per-shard key residency).
+      kernel_backend  "reference" | "pallas" engine room for the shard
+                 engines (see `repro.core.engine`); invalid alongside a
                  prebuilt engine.  Fused waves inherit it because the
                  scheduler proxy dispatches through `engine.lut_batch`.
+      shards     number of engine shards.  The router places each
+                 admitted request on the least-loaded shard that accepts
+                 its parameter set; `shards=1` (default) is the
+                 single-shard special case, behaviorally identical to
+                 the pre-shard runtime.
+      elastic    None/False: static per-shard limit (`max_inflight`).
+                 True: per-shard `ElasticAdmission` controllers
+                 (`repro.runtime.elastic`) grow the limit under backlog
+                 (occupancy permitting) and shrink it when idle, with
+                 `max_inflight` as the hard ceiling.  Or pass an
+                 `ElasticPolicy` for explicit knobs.
+      shard_devices  one device tuple per shard (defaults to
+                 `launch.mesh.shard_devices(shards)`); multi-device
+                 shards run the reference backend over a data mesh,
+                 and pallas shards are routed to a single device (the
+                 `ConfigError` combination, avoided at construction).
       fused      barrier concurrent requests' PBS rounds into shared
-                 `lut_batch` dispatches via a `FusedLutScheduler`.
+                 `lut_batch` dispatches via each shard's
+                 `FusedLutScheduler`.
       dedup      online (ciphertext, table) row dedup inside fused rounds.
-      max_inflight            concurrent worker threads.
+      ks_dedup   KS-level partial dedup: fused rows sharing a ciphertext
+                 but not a table key-switch once (`ks_dedup_hits`).
+      max_inflight            concurrent worker threads PER SHARD (the
+                              elastic ceiling when `elastic` is set).
       max_queued_per_client   backlog cap per client; beyond it `submit`
                               raises `AdmissionError`.
       fault / fault_hook      retry policy (`runtime.fault.FaultConfig`)
@@ -213,17 +246,22 @@ class ServeRuntime:
     Example (see also `examples/serve_requests.py` and the encrypted-ML
     traffic in `examples/fhe_gpt2.py` / `benchmarks/fhe_ml_serve.py`)::
 
-        rt = ServeRuntime(ctx, max_inflight=8)
+        rt = ServeRuntime(ctx, shards=2, max_inflight=8)
         h = rt.submit(graph, enc_inputs, client_id="alice")
         outputs = h.outputs()        # blocks; ciphertext arrays
         rt.close()
 
     Most callers go through `repro.api.Session(ctx, backend="serve")`,
-    which wraps submit/wait behind the portable Program contract.
+    which wraps submit/wait behind the portable Program contract (the
+    `shards=` knob threads through it like `max_inflight` does).
     """
 
     def __init__(self, ctx, engine: Optional[TaurusEngine] = None, *,
                  fused: bool = True, dedup: bool = True,
+                 ks_dedup: bool = True,
+                 shards: int = 1,
+                 elastic=None,
+                 shard_devices: Optional[list] = None,
                  max_inflight: int = 8,
                  max_queued_per_client: Optional[int] = None,
                  fault: Optional[FaultConfig] = None,
@@ -236,14 +274,8 @@ class ServeRuntime:
         if kernel_backend is not None and engine is not None:
             raise TypeError("pass kernel_backend OR a prebuilt engine, "
                             "not both")
-        self.engine = engine if engine is not None \
-            else TaurusEngine.from_context(
-                ctx, kernel_backend=kernel_backend or "reference")
         self.fused = fused
         self.telemetry = telemetry if telemetry is not None else Telemetry()
-        self.scheduler = (FusedLutScheduler(dedup=dedup,
-                                            telemetry=self.telemetry)
-                          if fused else None)
         self.fault = fault if fault is not None else FaultConfig(max_retries=2)
         # fuse the per-vector rounds of one request's tensor-level radix
         # nodes through the shared scheduler (IrInterpreter fan-out)
@@ -251,13 +283,19 @@ class ServeRuntime:
         # test/chaos hook: called as fault_hook(request, attempt) at the
         # start of every execution attempt; raising simulates a failure
         self.fault_hook = fault_hook
+        # per-shard limit (elastic ceiling when elastic is enabled)
         self.max_inflight = max_inflight
         self.max_queued_per_client = max_queued_per_client
+        self.n_shards = shards
+        self.shards = build_shards(
+            ctx, engine, n_shards=shards, fused=fused, dedup=dedup,
+            ks_dedup=ks_dedup, max_inflight=max_inflight, elastic=elastic,
+            kernel_backend=kernel_backend, telemetry=self.telemetry,
+            device_sets=shard_devices)
         self._lock = threading.Lock()
         self._queues: dict = {}                  # client -> deque[handle]
         self._client_ring: list = []             # round-robin order
         self._rr = 0
-        self._inflight = 0
         self._next_id = 0
         self._paused = start_paused
         self._closed = False
@@ -275,6 +313,20 @@ class ServeRuntime:
         # bounded so a long-lived server doesn't grow per-request state
         self._admitted_log: collections.deque = collections.deque(
             maxlen=10_000)
+
+    # -- single-shard back-compat surface ------------------------------------
+    @property
+    def engine(self) -> TaurusEngine:
+        """Shard 0's engine — THE engine of a `shards=1` runtime (the
+        object the caller passed in), the first shard's otherwise."""
+        return self.shards[0].engine
+
+    @property
+    def scheduler(self):
+        """Shard 0's `FusedLutScheduler` (None when `fused=False`) —
+        THE scheduler of a `shards=1` runtime.  Multi-shard callers read
+        each shard's own `rt.shards[i].scheduler`."""
+        return self.shards[0].scheduler
 
     @property
     def stats(self) -> StatsView:
@@ -366,7 +418,7 @@ class ServeRuntime:
         while True:
             with self._lock:
                 queued = sum(len(q) for q in self._queues.values())
-                busy = self._inflight
+                busy = sum(s.inflight for s in self.shards)
                 if queued and not busy and self._paused:
                     raise RuntimeError(
                         "drain() on a paused runtime with queued requests "
@@ -439,29 +491,54 @@ class ServeRuntime:
         for t in list(self._threads):
             t.join()
 
-    # -- admission (round-robin across clients) ------------------------------
+    # -- admission (round-robin across clients) + placement ------------------
+    def _queue_depth_locked(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def _place_locked(self) -> Optional[EngineShard]:
+        """Pick the shard for the next admission: parameter-set filter,
+        then least-loaded (fewest in-flight), then lowest index.  None
+        when every eligible shard is at its limit."""
+        params = self.ctx.params
+        best = None
+        for s in self.shards:
+            if s.capacity <= 0 or not s.accepts(params):
+                continue
+            if best is None or s.inflight < best.inflight:
+                best = s
+        return best
+
     def _admit_locked(self) -> None:
         if self._closed:
             return
-        while not self._paused and self._inflight < self.max_inflight:
+        while not self._paused:
+            shard = self._place_locked()
+            if shard is None:
+                # fleet saturated: with a backlog, give every shard's
+                # elastic controller a grow look (queue depth + its own
+                # recent occupancy) and retry if any limit rose — this
+                # makes ramp-up synchronous with demand, not timer-driven
+                depth = self._queue_depth_locked()
+                if depth and any([s.elastic_observe(depth)
+                                  for s in self.shards]):
+                    continue
+                return
             handle = self._next_handle_locked()
             if handle is None:
                 return
-            self._inflight += 1
-            if self.fused:
-                # register BEFORE the worker starts so a wave of
-                # admissions forms one full fusion barrier
-                self.scheduler.register()
+            # registers with the shard's fusion barrier BEFORE the
+            # worker starts, so a wave of admissions fuses fully
+            shard.acquire()
             handle.admitted_at = time.perf_counter()
             self._c["admitted"].inc()
             self._admitted_log.append(
                 (handle.request.client_id, handle.request.request_id))
             self.telemetry.instant("admit", cat="serve",
                                    request=handle.request.request_id,
-                                   client=handle.request.client_id)
-            self._g_queue_depth.set(
-                sum(len(q) for q in self._queues.values()))
-            t = threading.Thread(target=self._worker, args=(handle,),
+                                   client=handle.request.client_id,
+                                   shard=shard.index)
+            self._g_queue_depth.set(self._queue_depth_locked())
+            t = threading.Thread(target=self._worker, args=(handle, shard),
                                  daemon=True)
             self._threads.append(t)
             t.start()
@@ -488,7 +565,7 @@ class ServeRuntime:
         return None
 
     # -- execution -----------------------------------------------------------
-    def _worker(self, handle: RequestHandle) -> None:
+    def _worker(self, handle: RequestHandle, shard: EngineShard) -> None:
         req = handle.request
         tel = self.telemetry
         # backfill the queue-wait interval (its endpoints were stamped by
@@ -500,11 +577,10 @@ class ServeRuntime:
                        request=req.request_id, client=req.client_id)
             self._h_queue_wait.observe(wait_s)
         span = tel.span("request", cat="serve", request=req.request_id,
-                        client=req.client_id)
+                        client=req.client_id, shard=shard.index)
         with span:
             try:
-                eng = self.scheduler.proxy(self.engine) if self.fused \
-                    else self.engine
+                eng = shard.worker_engine()
                 interp = IrInterpreter(self.ctx, eng,
                                        intra_fuse=self.intra_fuse,
                                        holds_slot=self.fused,
@@ -551,19 +627,22 @@ class ServeRuntime:
                 else:
                     for f in handle.output_futures:
                         f.fail(handle.error)
-                if self.fused:
-                    self.scheduler.unregister()
+                if shard.scheduler is not None:
+                    shard.scheduler.unregister()
                 outcome = "completed" if handle.error is None else "failed"
                 span.set(retries=handle.retries, outcome=outcome)
                 tel.instant(outcome, cat="serve", request=req.request_id,
-                            client=req.client_id)
+                            client=req.client_id, shard=shard.index)
                 if handle.submitted_at is not None:
                     self._h_latency.observe(
                         handle.completed_at - handle.submitted_at)
                 with self._lock:
-                    self._inflight -= 1
+                    shard.release(outcome)
                     self._c["retries"].inc(handle.retries)
                     self._c[outcome].inc()
+                    # a completion with an empty queue is the elastic
+                    # controller's shrink opportunity (ramp-down to idle)
+                    shard.elastic_observe(self._queue_depth_locked())
                     self._threads = [t for t in self._threads
                                      if t.is_alive()
                                      and t is not threading.current_thread()]

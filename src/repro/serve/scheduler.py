@@ -87,8 +87,12 @@ class FusedEngineProxy:
             raise ValueError(
                 f"lut_batch: {cts.shape[0]} ciphertexts but "
                 f"{lut_polys.shape[0]} LUT polynomials")
-        keys = _row_keys(cts, lut_polys) if self._scheduler.dedup else None
-        return self._scheduler.submit(self._engine, cts, lut_polys, keys)
+        sched = self._scheduler
+        # pre-hash for full-row dedup AND the KS-level partial dedup —
+        # both consume these digests on the leader's dict-scan path
+        keys = (_row_keys(cts, lut_polys)
+                if (sched.dedup or sched.ks_dedup) else None)
+        return sched.submit(self._engine, cts, lut_polys, keys)
 
     def lut_batch_tables(self, cts: jax.Array, tables) -> jax.Array:
         tables = validate_lut_tables(cts, tables, self.params)
@@ -132,25 +136,33 @@ class FusedLutScheduler:
         print(sched.dedup_hit_rate, sched.mean_occupancy)
     """
 
-    def __init__(self, *, dedup: bool = True, pad_batches: bool = True,
+    def __init__(self, *, dedup: bool = True, ks_dedup: bool = True,
+                 pad_batches: bool = True,
                  max_wait_s: float = 10.0,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 shard_ns: Optional[str] = None):
         self.dedup = dedup
+        # KS-level partial dedup: rows sharing a CIPHERTEXT but not a
+        # table key-switch once and fan the small-key result out across
+        # their tables (engines exposing keyswitch/lut_batch_small only)
+        self.ks_dedup = ks_dedup
         self.pad_batches = pad_batches
         self.max_wait_s = max_wait_s
         self.telemetry = telemetry if telemetry is not None else Telemetry()
+        # per-shard metric namespace (e.g. "serve.shard.0"): every round
+        # counter below lands in the shared sched.* aggregate AND, when
+        # set, in this shard's own serve.shard.<i>.* counters
+        self.shard_ns = shard_ns
         self._cv = threading.Condition()
         self._active = 0
         self._pending: list = []
         self._round_seq = 0
         tel = self.telemetry
-        self._c = {
-            "fused_rounds": tel.counter("sched.fused_rounds"),
-            "logical_luts": tel.counter("sched.logical_luts"),
-            "dispatched_luts": tel.counter("sched.dispatched_luts"),
-            "padded_luts": tel.counter("sched.padded_luts"),
-            "dedup_hits": tel.counter("sched.dedup_hits"),
-        }
+        names = ("fused_rounds", "logical_luts", "dispatched_luts",
+                 "padded_luts", "dedup_hits", "ks_dedup_hits")
+        self._c = {k: tel.counter(f"sched.{k}") for k in names}
+        self._shard_c = ({k: tel.counter(f"{shard_ns}.{k}") for k in names}
+                         if shard_ns else None)
         self._occ_hist = tel.histogram("sched.occupancy")
         # blocked requests / active requests, bounded observability log
         self._occupancy: collections.deque = collections.deque(maxlen=10_000)
@@ -167,11 +179,20 @@ class FusedLutScheduler:
         dispatched_luts   rows after dedup, before padding
         padded_luts       rows entering engine.lut_batch
         dedup_hits        rows removed by online (ct, LUT) dedup
+        ks_dedup_hits     rows whose keyswitch was shared (same ct,
+                          different table — KS-level partial dedup)
         occupancy         bounded deque of per-round occupancy samples
         """
         sources: dict = dict(self._c)
         sources["occupancy"] = self._occupancy
         return StatsView(sources)
+
+    def _inc(self, key: str, n: int = 1) -> None:
+        """Bump one round counter in the shared sched.* aggregate and,
+        for a shard-owned scheduler, in its serve.shard.<i>.* mirror."""
+        self._c[key].inc(n)
+        if self._shard_c is not None:
+            self._shard_c[key].inc(n)
 
     # -- lifecycle -----------------------------------------------------------
     def proxy(self, engine: TaurusEngine) -> FusedEngineProxy:
@@ -292,37 +313,81 @@ class FusedLutScheduler:
         with tel.span("fused_round", cat="sched", round=round_id,
                       participants=len(entries), rows=n,
                       occupancy=occupancy) as sp:
-            inverse = None
-            if self.dedup:
-                keys: list = []
+            all_keys: Optional[list] = None
+            if self.dedup or self.ks_dedup:
+                all_keys = []
                 for e in entries:  # workers pre-hash; direct submits fall back
-                    keys.extend(e.keys if e.keys is not None
-                                else _row_keys(e.cts, e.polys))
-                unique_idx, inverse, hits = fused_round_dedup(keys)
+                    all_keys.extend(e.keys if e.keys is not None
+                                    else _row_keys(e.cts, e.polys))
+            inverse = None
+            sel = None
+            if self.dedup:
+                unique_idx, inverse, hits = fused_round_dedup(all_keys)
                 if hits:
                     sel = np.asarray(unique_idx)
                     cts, polys = cts[sel], polys[sel]
                 else:
                     inverse = None
             nb = int(cts.shape[0])
+            # KS-level partial dedup (ISSUE 10): among the dispatched
+            # rows, those sharing a CIPHERTEXT but not a table (the radix
+            # carry rounds' msg/carry table pairs are the canonical case)
+            # key-switch once; the small-key result fans out across their
+            # tables and the round resumes through lut_batch_small.
+            # Decrypt-identical: keyswitch∘lut_batch_small IS lut_batch.
+            ks_hits = 0
+            ks_plan = None
+            if (self.ks_dedup and nb > 1
+                    and getattr(engine, "supports_ks_split", False)):
+                if all_keys is not None:
+                    rows = sel if sel is not None else range(n)
+                    ct_keys = [all_keys[j][0] for j in rows]
+                else:
+                    arr = np.asarray(cts)
+                    ct_keys = [arr[i].tobytes() for i in range(nb)]
+                uq, ct_inv, ks_hits = fused_round_dedup(ct_keys)
+                if ks_hits:
+                    ks_plan = (np.asarray(uq), np.asarray(ct_inv))
+            if ks_plan is not None:
+                uq_idx, ct_inv = ks_plan
+                u = int(uq_idx.shape[0])
+                ucts = cts[uq_idx]
+                if self.pad_batches:        # quantize the KS batch shape too
+                    pu = _pad_batch(u)
+                    if pu > u:
+                        reps = -(-pu // u)
+                        ucts = jnp.tile(ucts, (reps, 1))[:pu]
+                body = engine.keyswitch(ucts)[:u][ct_inv]
+            else:
+                body = cts
             if self.pad_batches:
                 p = _pad_batch(nb)
                 if p > nb:                      # tile real rows to a reusable
                     reps = -(-p // nb)          # compiled batch shape
-                    cts = jnp.tile(cts, (reps, 1))[:p]
+                    body = jnp.tile(body, (reps, 1))[:p]
                     polys = jnp.tile(polys, (reps, 1))[:p]
-            padded = int(cts.shape[0])
-            sp.set(dedup_hits=hits, dispatched=nb, padded=padded)
-            out = engine.lut_batch(cts, polys)[:nb]
-        self._c["fused_rounds"].inc()
-        self._c["logical_luts"].inc(n)
-        self._c["dedup_hits"].inc(hits)
-        self._c["dispatched_luts"].inc(nb)
-        self._c["padded_luts"].inc(padded)
+            padded = int(body.shape[0])
+            sp.set(dedup_hits=hits, ks_dedup_hits=ks_hits,
+                   dispatched=nb, padded=padded)
+            if ks_plan is not None:
+                out = engine.lut_batch_small(body, polys)[:nb]
+            else:
+                out = engine.lut_batch(body, polys)[:nb]
+        self._inc("fused_rounds")
+        self._inc("logical_luts", n)
+        self._inc("dedup_hits", hits)
+        self._inc("ks_dedup_hits", ks_hits)
+        self._inc("dispatched_luts", nb)
+        self._inc("padded_luts", padded)
         bsk_b, ksk_b = self._engine_key_bytes(engine)
         tel.bandwidth.account_round(
             participants=len(entries), rows_logical=n, rows_dispatched=nb,
             rows_padded=padded, bsk_bytes=bsk_b, ksk_bytes=ksk_b)
+        if self.shard_ns is not None:
+            # the bandwidth ledger aggregates across shards; the per-shard
+            # key-stream traffic lands in this shard's own namespace
+            tel.counter(f"{self.shard_ns}.bsk_bytes_streamed").inc(bsk_b)
+            tel.counter(f"{self.shard_ns}.ksk_bytes_streamed").inc(ksk_b)
         if inverse is not None:
             out = out[np.asarray(inverse)]
         ofs = 0

@@ -264,13 +264,15 @@ class _RealDriver:
     """Shared machinery of the open-/closed-loop wall-clock drivers."""
 
     def __init__(self, scenario, ctx, engine, *, max_inflight: int,
-                 time_scale: float, validate: bool, fused: bool):
+                 time_scale: float, validate: bool, fused: bool,
+                 shards: int = 1, elastic=None):
         self.scenario = scenario
         self.time_scale = time_scale
         self.validate = validate
         self.tel = Telemetry()
         self.rt = ServeRuntime(ctx, engine, max_inflight=max_inflight,
-                               fused=fused, telemetry=self.tel)
+                               fused=fused, shards=shards, elastic=elastic,
+                               telemetry=self.tel)
         self.ic = IntegerContext.create(ctx, self.rt.engine)
         self.records: list = []
         self._rec_lock = threading.Lock()
@@ -340,15 +342,20 @@ class _RealDriver:
 
 def run_scenario(scenario, ctx, engine=None, *, max_inflight: int = 4,
                  time_scale: float = 1.0, validate: bool = False,
-                 fused: bool = True) -> ScenarioRun:
+                 fused: bool = True, shards: int = 1,
+                 elastic=None) -> ScenarioRun:
     """Drive the scenario against a real `ServeRuntime` on the wall
     clock (virtual seconds × `time_scale`).  Open-loop traffic is drawn
     and pre-encrypted before the clock starts, so the measured window
     contains serving work only; closed-loop clients encrypt inline (the
     client's own think-time work).  validate=True decrypts every DONE
-    request and checks it against the workload's integer oracle."""
+    request and checks it against the workload's integer oracle.
+    `shards`/`elastic` thread straight to `ServeRuntime` — the scenario
+    plays against a sharded router exactly as production traffic would
+    (`max_inflight` then bounds each shard, not the whole runtime)."""
     d = _RealDriver(scenario, ctx, engine, max_inflight=max_inflight,
-                    time_scale=time_scale, validate=validate, fused=fused)
+                    time_scale=time_scale, validate=validate, fused=fused,
+                    shards=shards, elastic=elastic)
     try:
         return _run_real(d, scenario)
     finally:
@@ -436,5 +443,6 @@ def _run_real(d: _RealDriver, scenario) -> ScenarioRun:
     report = evaluate(scenario, windows, overall_delta, overall,
                       runner="real")
     report["max_inflight"] = d.rt.max_inflight
+    report["shards"] = d.rt.n_shards
     report["time_scale"] = d.time_scale
     return ScenarioRun(report, d.records)

@@ -413,17 +413,28 @@ def test_bench_run_exits_nonzero_on_failure(tmp_path, capsys):
 
 
 def test_bench_dry_run_checks_obs_columns():
+    scaling = ("shards", "clients", "requests_per_s",
+               "per_shard_occupancy", "occupancy_ratio")
     good = SimpleNamespace(
         run=lambda: [],
-        BENCH_COLUMNS=("p50_s", "p99_s", "bsk_bytes_saved", "extra"))
+        BENCH_COLUMNS=("p50_s", "p99_s", "bsk_bytes_saved", "extra"),
+        SCALING_COLUMNS=scaling)
     assert _bench_main(["--only", "serve", "--dry-run"],
                        {"serve": good}) == 0
     # a serve benchmark that stops declaring the observability columns
     # must fail the dry run (BENCH_serve.json consumers key on them)
-    stale = SimpleNamespace(run=lambda: [], BENCH_COLUMNS=("p50_s",))
+    stale = SimpleNamespace(run=lambda: [], BENCH_COLUMNS=("p50_s",),
+                            SCALING_COLUMNS=scaling)
     assert _bench_main(["--only", "serve", "--dry-run"],
                        {"serve": stale}) == 1
-    norun = SimpleNamespace(BENCH_COLUMNS=good.BENCH_COLUMNS)
+    # likewise for the shard-sweep scaling row's columns (PR 10)
+    noscale = SimpleNamespace(run=lambda: [],
+                              BENCH_COLUMNS=good.BENCH_COLUMNS,
+                              SCALING_COLUMNS=("shards",))
+    assert _bench_main(["--only", "serve", "--dry-run"],
+                       {"serve": noscale}) == 1
+    norun = SimpleNamespace(BENCH_COLUMNS=good.BENCH_COLUMNS,
+                            SCALING_COLUMNS=scaling)
     assert _bench_main(["--only", "serve", "--dry-run"],
                        {"serve": norun}) == 1
 
